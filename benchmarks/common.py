@@ -1,0 +1,45 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import csv
+import io
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+# the per-figure benchmark set: spans the CDU spectrum of Table III
+FIG9_SET = [
+    "chem_bp", "chem_west", "band_jagmesh", "band_rdb", "band_dw2048",
+    "grid_activsg", "band_cz", "grid_bips", "band_nnc", "ckt_add20",
+    "ckt_fpga", "wide_c36", "ckt_c204", "grid_gemat", "chem_bayer",
+    "ckt_rajat04", "ckt_add32", "band_bcsstm", "ckt_rajat19", "hub_small",
+]
+
+
+def emit(rows: list[dict], name: str) -> str:
+    """Print CSV to stdout and save under results/bench/<name>.csv."""
+    if not rows:
+        return ""
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=list(rows[0]))
+    w.writeheader()
+    w.writerows(rows)
+    text = buf.getvalue()
+    print(text)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.csv"), "w") as f:
+        f.write(text)
+    return text
+
+
+def timeit(fn, *args, repeat: int = 3, warmup: int = 1):
+    for _ in range(warmup):
+        fn(*args)
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return best

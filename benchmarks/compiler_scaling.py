@@ -1,0 +1,45 @@
+"""§IV-D / Table IV: compiler complexity O(nnz * d) empirical check.
+
+Fits compile-time against nnz across a size ladder of one archetype; the
+fitted exponent should be ~1 (linear in nnz for bounded max in-degree d).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import api
+from repro.core.matrices import banded
+
+from .common import emit
+
+
+def run() -> list[dict]:
+    rows = []
+    pts = []
+    for i, n in enumerate([512, 1024, 2048, 4096, 8192, 16384]):
+        mat = banded(n, 24, 0.5, 99 + i, f"scale_{n}")
+        prog = api.compile(mat)
+        t = prog.stats.compile_seconds
+        pts.append((mat.nnz, t))
+        rows.append({
+            "n": n,
+            "nnz": mat.nnz,
+            "compile_s": round(t, 4),
+            "cycles": prog.stats.cycles,
+            "us_per_nnz": round(1e6 * t / mat.nnz, 3),
+        })
+    nnz = np.log([p[0] for p in pts])
+    tt = np.log([max(p[1], 1e-9) for p in pts])
+    slope = float(np.polyfit(nnz, tt, 1)[0])
+    rows.append({"n": "fit", "nnz": "-", "compile_s": "-",
+                 "cycles": "-", "us_per_nnz": f"exponent={slope:.2f}"})
+    return rows
+
+
+def main() -> None:
+    emit(run(), "table4_compiler_scaling")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Table III: structural statistics of the benchmark suite (CDU nodes /
+edges / levels, load balance, peak throughput, compile time)."""
+
+from __future__ import annotations
+
+from repro.core import api
+from repro.core.dag import analyze
+from repro.core.matrices import generate, suite_names
+from repro.core.program import AccelConfig
+
+from .common import emit
+
+
+def run(max_n: int | None = 40000) -> list[dict]:
+    rows = []
+    cfg = AccelConfig()
+    for name in suite_names(max_n):
+        mat = generate(name)
+        info = analyze(mat, num_cus=cfg.num_cus)
+        prog = api.compile(mat)
+        st = prog.stats
+        rows.append({
+            **info.row(),
+            "load_balance_cv": round(st.load_balance_cv(), 1),
+            "peak_gops": round(st.peak_throughput_gops(cfg), 2),
+            "this_work_gops": round(st.throughput_gops(cfg), 2),
+            "compile_time_s": round(st.compile_seconds, 4),
+        })
+    return rows
+
+
+def main() -> None:
+    emit(run(), "table3_suite_stats")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Checkpoint substrate."""
+
+from .checkpoint import (  # noqa: F401
+    CheckpointManager,
+    restore_checkpoint,
+    save_checkpoint,
+)

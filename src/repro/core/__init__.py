@@ -1,0 +1,13 @@
+"""Core library: the paper's medium-granularity SpTRSV dataflow in JAX.
+
+Contains the custom compiler (node allocation + edge-granular scheduling +
+psum caching + ICR + bank model), the coarse/fine baseline dataflows, the
+branch-free VLIW executors, and the benchmark-matrix suite.
+"""
+
+from . import api, dag, matrices  # noqa: F401
+from .csr import TriCSR, serial_solve  # noqa: F401
+from .program import AccelConfig, Program, ScheduleStats  # noqa: F401
+from .schedule import compile_program  # noqa: F401
+from .executor import execute_jax, execute_numpy, make_jax_executor  # noqa: F401
+from .fine import FineConfig, schedule_fine  # noqa: F401

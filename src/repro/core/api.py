@@ -1,0 +1,104 @@
+"""Public API of the SpTRSV core library.
+
+    from repro.core import api
+    mat = api.matrix("ckt_add20")
+    prog = api.compile(mat)                      # medium dataflow, ICR, psum
+    x = api.solve(prog, b)                       # JAX executor
+    api.report(prog)                             # paper metrics
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import matrices
+from .csr import TriCSR, random_rhs, serial_solve
+from .dag import DagInfo, analyze
+from .executor import execute_jax, execute_numpy, make_jax_executor
+from .fine import FineConfig, FineStats, schedule_fine
+from .program import AccelConfig, Program
+from .schedule import compile_program
+
+__all__ = [
+    "matrix",
+    "compile",
+    "solve",
+    "solve_numpy",
+    "reference_solve",
+    "report",
+    "AccelConfig",
+    "Program",
+    "TriCSR",
+    "DagInfo",
+]
+
+
+def matrix(name: str) -> TriCSR:
+    return matrices.generate(name)
+
+
+def compile(mat: TriCSR, cfg: AccelConfig | None = None) -> Program:  # noqa: A001
+    return compile_program(mat, cfg)
+
+
+def solve(prog: Program, b: np.ndarray) -> np.ndarray:
+    return execute_jax(prog, b)
+
+
+def solve_numpy(prog: Program, b: np.ndarray) -> np.ndarray:
+    return execute_numpy(prog, b)
+
+
+def reference_solve(mat: TriCSR, b: np.ndarray) -> np.ndarray:
+    return serial_solve(mat, b)
+
+
+def report(prog: Program) -> dict:
+    st, cfg = prog.stats, prog.config
+    out = {
+        "name": st.name,
+        "n": st.n,
+        "nnz": st.nnz,
+        "cycles": st.cycles,
+        "throughput_gops": round(st.throughput_gops(cfg), 3),
+        "peak_gops": round(st.peak_throughput_gops(cfg), 3),
+        "pe_utilization": round(st.utilization(), 4),
+        "load_balance_cv_pct": round(st.load_balance_cv(), 1),
+        "compile_s": round(st.compile_seconds, 4),
+        "dm_escapes": st.dm_escapes,
+        **{k: round(v, 4) for k, v in st.nop_breakdown().items()},
+        "constraints": st.constraints,
+        "conflicts": st.conflicts,
+        "reuse_events": st.reuse_events,
+    }
+    return out
+
+
+def compile_split(mat: TriCSR, cfg: AccelConfig | None = None,
+                  max_indegree: int = 64):
+    """Beyond-paper path: split heavy nodes (core.transform), then compile.
+
+    Returns (program, split_result); solve with
+    ``split.extract(solve(program, split.expand_rhs(b)))``.
+    """
+    from .transform import split_heavy_nodes
+
+    split = split_heavy_nodes(mat, max_indegree=max_indegree)
+    return compile_program(split.mat, cfg), split
+
+
+def solve_split(prog: Program, split, b: np.ndarray) -> np.ndarray:
+    return split.extract(execute_jax(prog, split.expand_rhs(b)))
+
+
+def baseline_coarse(mat: TriCSR, base: AccelConfig | None = None) -> Program:
+    cfg = base or AccelConfig()
+    import dataclasses
+
+    return compile_program(
+        mat, dataclasses.replace(cfg, dataflow="coarse", icr=False, psum_cache=False)
+    )
+
+
+def baseline_fine(mat: TriCSR, cfg: FineConfig | None = None) -> FineStats:
+    return schedule_fine(mat, cfg)

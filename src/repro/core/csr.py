@@ -1,0 +1,131 @@
+"""Compressed-sparse-row storage for sparse lower-triangular systems.
+
+Follows the paper's convention (Fig. 1b / Algo. 1):
+  * the matrix is lower triangular with a non-zero diagonal,
+  * within each row the off-diagonal entries come first (ascending column)
+    and the diagonal entry is stored LAST (``rowptr[i+1]-1``),
+  * ``rowptr`` has length ``n+1`` with ``rowptr[n] == nnz``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import numpy as np
+
+__all__ = ["TriCSR", "serial_solve", "from_coo", "random_rhs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TriCSR:
+    """A sparse lower-triangular matrix in the paper's CSR layout."""
+
+    n: int
+    rowptr: np.ndarray  # int64 [n+1]
+    colidx: np.ndarray  # int64 [nnz]
+    values: np.ndarray  # float64 [nnz]
+    name: str = "unnamed"
+
+    # ------------------------------------------------------------------
+    @property
+    def nnz(self) -> int:
+        return int(self.rowptr[-1])
+
+    @property
+    def n_edges(self) -> int:
+        """Off-diagonal non-zeros == DAG edge count."""
+        return self.nnz - self.n
+
+    @property
+    def binary_nodes(self) -> int:
+        """Paper Table III: number of binary nodes == flop count == 2*nnz - n."""
+        return 2 * self.nnz - self.n
+
+    # ------------------------------------------------------------------
+    def validate(self) -> None:
+        assert self.rowptr.shape == (self.n + 1,)
+        assert self.rowptr[0] == 0
+        assert np.all(np.diff(self.rowptr) >= 1), "every row needs a diagonal"
+        for i in range(self.n):
+            lo, hi = self.rowptr[i], self.rowptr[i + 1]
+            cols = self.colidx[lo:hi]
+            assert cols[-1] == i, f"row {i}: diagonal must be stored last"
+            off = cols[:-1]
+            assert np.all(off < i), f"row {i}: super-diagonal entry"
+            assert np.all(np.diff(off) > 0), f"row {i}: unsorted/duplicate cols"
+        assert not np.any(self.values[self.rowptr[1:] - 1] == 0.0), "zero diagonal"
+
+    def row(self, i: int) -> tuple[np.ndarray, np.ndarray]:
+        lo, hi = self.rowptr[i], self.rowptr[i + 1]
+        return self.colidx[lo:hi], self.values[lo:hi]
+
+    def diag(self) -> np.ndarray:
+        return self.values[self.rowptr[1:] - 1]
+
+    def in_degree(self) -> np.ndarray:
+        """Number of input edges (off-diagonal nnz) per node."""
+        return np.diff(self.rowptr) - 1
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros((self.n, self.n))
+        for i in range(self.n):
+            cols, vals = self.row(i)
+            out[i, cols] = vals
+        return out
+
+
+def from_coo(
+    n: int,
+    rows: Iterable[int],
+    cols: Iterable[int],
+    vals: Iterable[float],
+    diag: np.ndarray,
+    name: str = "unnamed",
+) -> TriCSR:
+    """Build a TriCSR from strictly-lower COO triples plus a diagonal vector."""
+    rows = np.asarray(list(rows), dtype=np.int64)
+    cols = np.asarray(list(cols), dtype=np.int64)
+    vals = np.asarray(list(vals), dtype=np.float64)
+    assert np.all(cols < rows), "COO part must be strictly lower triangular"
+    # de-duplicate (keep last) and sort row-major
+    key = rows * n + cols
+    order = np.argsort(key, kind="stable")
+    rows, cols, vals, key = rows[order], cols[order], vals[order], key[order]
+    keep = np.ones(len(key), dtype=bool)
+    keep[:-1] = key[:-1] != key[1:]
+    rows, cols, vals = rows[keep], cols[keep], vals[keep]
+
+    counts = np.bincount(rows, minlength=n) + 1  # +1 diagonal per row
+    rowptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=rowptr[1:])
+    colidx = np.empty(rowptr[-1], dtype=np.int64)
+    values = np.empty(rowptr[-1], dtype=np.float64)
+    cursor = rowptr[:-1].copy()
+    for r, c, v in zip(rows, cols, vals):
+        colidx[cursor[r]] = c
+        values[cursor[r]] = v
+        cursor[r] += 1
+    # diagonal last
+    colidx[rowptr[1:] - 1] = np.arange(n)
+    values[rowptr[1:] - 1] = np.asarray(diag, dtype=np.float64)
+    mat = TriCSR(n=n, rowptr=rowptr, colidx=colidx, values=values, name=name)
+    mat.validate()
+    return mat
+
+
+def serial_solve(mat: TriCSR, b: np.ndarray) -> np.ndarray:
+    """Algorithm 1 of the paper — the ground-truth oracle."""
+    x = np.zeros(mat.n, dtype=np.float64)
+    for i in range(mat.n):
+        lo, hi = mat.rowptr[i], mat.rowptr[i + 1]
+        s = 0.0
+        for j in range(lo, hi - 1):
+            s += mat.values[j] * x[mat.colidx[j]]
+        x[i] = (b[i] - s) / mat.values[hi - 1]
+    return x
+
+
+def random_rhs(mat: TriCSR, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(mat.n)

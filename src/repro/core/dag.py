@@ -1,0 +1,115 @@
+"""DAG view of a sparse triangular system + the paper's structural statistics.
+
+Nodes = matrix rows, edges = off-diagonal non-zeros (j -> i for L[i, j]).
+Since the matrix is lower triangular, row order IS a topological order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .csr import TriCSR
+
+__all__ = ["DagInfo", "analyze", "out_adjacency"]
+
+
+def out_adjacency(mat: TriCSR) -> tuple[np.ndarray, np.ndarray]:
+    """CSC-style adjacency: for each node j, the consumers i with edge j->i.
+
+    Returns (outptr [n+1], outidx [n_edges]) sorted by consumer id.
+    """
+    n = mat.n
+    srcs = []
+    dsts = []
+    for i in range(n):
+        cols, _ = mat.row(i)
+        for j in cols[:-1]:
+            srcs.append(j)
+            dsts.append(i)
+    srcs = np.asarray(srcs, dtype=np.int64)
+    dsts = np.asarray(dsts, dtype=np.int64)
+    order = np.lexsort((dsts, srcs))
+    srcs, dsts = srcs[order], dsts[order]
+    outptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(np.bincount(srcs, minlength=n), out=outptr[1:])
+    return outptr, dsts
+
+
+@dataclasses.dataclass(frozen=True)
+class DagInfo:
+    """Table III statistics for one benchmark DAG."""
+
+    name: str
+    n: int
+    nnz: int
+    binary_nodes: int
+    levels: np.ndarray            # level (longest-path depth) per node
+    n_levels: int
+    level_width: np.ndarray       # nodes per level
+    cdu_threshold: int
+    cdu_node_ratio: float         # % of nodes that are CDU
+    cdu_edge_ratio: float         # % of input edges landing on CDU nodes
+    cdu_level_ratio: float        # % of levels that contain CDU nodes
+    cdu_edges_per_node: float     # average in-degree of CDU nodes
+    max_in_degree: int
+
+    def row(self) -> dict:
+        return {
+            "name": self.name,
+            "n": self.n,
+            "nnz": self.nnz,
+            "binary_nodes": self.binary_nodes,
+            "levels": self.n_levels,
+            "cdu_nodes_pct": round(self.cdu_node_ratio * 100, 1),
+            "cdu_edges_pct": round(self.cdu_edge_ratio * 100, 1),
+            "cdu_levels_pct": round(self.cdu_level_ratio * 100, 1),
+            "cdu_edges_per_node": round(self.cdu_edges_per_node, 1),
+            "max_in_degree": self.max_in_degree,
+        }
+
+
+def compute_levels(mat: TriCSR) -> np.ndarray:
+    """Longest-path level per node (level-scheduling / Fig. 1c)."""
+    n = mat.n
+    level = np.zeros(n, dtype=np.int64)
+    for i in range(n):
+        cols, _ = mat.row(i)
+        off = cols[:-1]
+        if len(off):
+            level[i] = int(level[off].max()) + 1
+    return level
+
+
+def analyze(mat: TriCSR, num_cus: int = 64, cdu_fraction: float = 0.2) -> DagInfo:
+    """CDU statistics exactly as defined in the paper (§II-C, Table III).
+
+    A CDU node sits in a level whose width is below ``cdu_fraction *
+    num_cus`` (the paper sets the threshold at 20% of max parallelism).
+    """
+    level = compute_levels(mat)
+    n_levels = int(level.max()) + 1
+    width = np.bincount(level, minlength=n_levels)
+    threshold = max(1, int(round(cdu_fraction * num_cus)))
+    cdu_level = width < threshold
+    is_cdu = cdu_level[level]
+    indeg = mat.in_degree()
+    total_edges = max(1, int(indeg.sum()))
+    cdu_nodes = int(is_cdu.sum())
+    cdu_edges = int(indeg[is_cdu].sum())
+    return DagInfo(
+        name=mat.name,
+        n=mat.n,
+        nnz=mat.nnz,
+        binary_nodes=mat.binary_nodes,
+        levels=level,
+        n_levels=n_levels,
+        level_width=width,
+        cdu_threshold=threshold,
+        cdu_node_ratio=cdu_nodes / mat.n,
+        cdu_edge_ratio=cdu_edges / total_edges,
+        cdu_level_ratio=float(cdu_level.sum()) / n_levels,
+        cdu_edges_per_node=(cdu_edges / cdu_nodes) if cdu_nodes else 0.0,
+        max_in_degree=int(indeg.max()) if mat.n else 0,
+    )

@@ -1,0 +1,135 @@
+"""Executors for compiled VLIW programs.
+
+Three implementations of identical semantics:
+  * `execute_numpy`  — simple per-cycle Python/numpy loop (debug oracle);
+  * `execute_jax`    — `jax.lax.scan` over cycles, fully vectorized over CUs
+                       (the production CPU/TPU path for moderate n);
+  * the Pallas kernel in `repro.kernels.sptrsv` (VMEM-resident register
+    files, BlockSpec-tiled instruction stream).
+
+Per-cycle semantics (see program.py): the psum control is applied first
+(it configures the S1/S2 muxes and psum register file of Fig. 4b), then the
+PE op executes.  Edges only ever read x values finalized in *earlier*
+cycles (the scheduler guarantees it), so a cycle can be evaluated as one
+parallel gather/FMA/scatter over all CUs.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .program import (
+    OP_EDGE,
+    OP_FINAL,
+    PS_KEEP,
+    PS_LOAD,
+    PS_RESET,
+    PS_STORE_RESET,
+    PS_SWAP,
+    Program,
+)
+from .schedule import PSUM_OVERFLOW_SLOTS
+
+__all__ = ["execute_numpy", "execute_jax", "make_jax_executor"]
+
+
+def _psum_slots(prog: Program) -> int:
+    base = prog.config.psum_words + PSUM_OVERFLOW_SLOTS
+    return max(base, prog.num_slots or 0)
+
+
+def execute_numpy(prog: Program, b: np.ndarray) -> np.ndarray:
+    """Reference interpretation of the instruction stream."""
+    n, p = prog.n, prog.num_cus
+    x = np.zeros(n + 1, dtype=np.float64)
+    feedback = np.zeros(p, dtype=np.float64)
+    rf = np.zeros((p, _psum_slots(prog)), dtype=np.float64)
+    stream = prog.stream.astype(np.float64)
+
+    for t in range(prog.cycles):
+        for c in range(p):
+            op = prog.opcode[t, c]
+            if op == 0:
+                continue
+            ctrl = prog.psum_ctrl[t, c]
+            slot = prog.psum_slot[t, c]
+            pv = feedback[c]
+            if ctrl == PS_RESET:
+                pv = 0.0
+            elif ctrl == PS_LOAD:
+                pv = rf[c, slot]
+            elif ctrl == PS_STORE_RESET:
+                rf[c, slot] = pv
+                pv = 0.0
+            elif ctrl == PS_SWAP:
+                pv, rf[c, slot] = rf[c, slot], pv
+            v = stream[prog.val_idx[t, c]]
+            s = prog.src_idx[t, c]
+            if op == OP_EDGE:
+                pv = pv + v * x[s]
+            else:  # OP_FINAL
+                out = (b[s] - pv) * v
+                x[prog.out_idx[t, c]] = out
+            feedback[c] = pv
+    return x[:n]
+
+
+def make_jax_executor(prog: Program):
+    """Build a jitted `solve(b) -> x` closure for one compiled program.
+
+    All instruction arrays become constants folded into the jaxpr; the
+    cycle loop is a `lax.scan` whose carry is (x, feedback, psum_rf).
+    """
+    n, p = prog.n, prog.num_cus
+    ops = jnp.asarray(prog.opcode.astype(np.int32))
+    vidx = jnp.asarray(prog.val_idx)
+    sidx = jnp.asarray(prog.src_idx)
+    oidx = jnp.asarray(prog.out_idx)
+    pctl = jnp.asarray(prog.psum_ctrl.astype(np.int32))
+    pslt = jnp.asarray(prog.psum_slot.astype(np.int32))
+    stream = jnp.asarray(prog.stream, dtype=jnp.float32)
+    nslots = _psum_slots(prog)
+    lanes = jnp.arange(p)
+
+    def solve(b: jnp.ndarray) -> jnp.ndarray:
+        bx = jnp.concatenate([b.astype(jnp.float32), jnp.zeros((1,), jnp.float32)])
+
+        def step(carry, instr):
+            x, feedback, rf = carry
+            op, vi, si, oi, ct, sl = instr
+            pv = feedback
+            slot_val = rf[lanes, sl]
+            # psum control mux (S1/S2 of Fig. 4b)
+            pv = jnp.where(ct == PS_RESET, 0.0, pv)
+            pv = jnp.where(ct == PS_LOAD, slot_val, pv)
+            store_val = jnp.where(
+                (ct == PS_STORE_RESET) | (ct == PS_SWAP), feedback, slot_val
+            )
+            rf = rf.at[lanes, sl].set(store_val)
+            pv = jnp.where(ct == PS_STORE_RESET, 0.0, pv)
+            pv = jnp.where(ct == PS_SWAP, slot_val, pv)
+
+            v = stream[vi]
+            pv = jnp.where(op == OP_EDGE, pv + v * x[si], pv)
+            outv = (bx[si] - pv) * v
+            # non-FINAL lanes scatter into the dummy slot x[n]
+            write_idx = jnp.where(op == OP_FINAL, oi, n)
+            x = x.at[write_idx].set(outv, mode="promise_in_bounds")
+            return (x, pv, rf), ()
+
+        x0 = jnp.zeros(n + 1, dtype=jnp.float32)
+        f0 = jnp.zeros(p, dtype=jnp.float32)
+        rf0 = jnp.zeros((p, nslots), dtype=jnp.float32)
+        (x, _, _), _ = jax.lax.scan(
+            step, (x0, f0, rf0), (ops, vidx, sidx, oidx, pctl, pslt)
+        )
+        return x[:n]
+
+    return jax.jit(solve)
+
+
+def execute_jax(prog: Program, b: np.ndarray) -> np.ndarray:
+    return np.asarray(make_jax_executor(prog)(jnp.asarray(b)))

@@ -1,0 +1,155 @@
+"""Instruction-stream program emitted by the compiler.
+
+The accelerator is VLIW (paper §II-B): one instruction word per CU per cycle.
+We encode the word as parallel dense arrays of shape [cycles, num_cus] — the
+software-managed-memory philosophy of the paper carried to its conclusion:
+*all* irregularity is resolved at compile time and the executor (numpy / JAX
+scan / Pallas kernel) runs a branch-free data-driven program.
+
+Opcode / psum-control encodings mirror Fig. 5 of the paper:
+  * ``ct=1`` MAC edges  -> OP_EDGE  : psum += L_ij * x[src]
+  * ``ct=0`` node update-> OP_FINAL : x[out] = (b[src] - psum) * L_ii^{-1}
+    (division is performed as multiplication by the compiler-computed
+    reciprocal, exactly as in §III-B).
+The psum-control field encodes the S1/S2 multiplexer + psum register file
+behaviour of §IV-B (keep/feedback, reset, load, store, read-before-write
+swap).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "AccelConfig",
+    "ScheduleStats",
+    "Program",
+    "OP_NOP",
+    "OP_EDGE",
+    "OP_FINAL",
+    "PS_KEEP",
+    "PS_RESET",
+    "PS_LOAD",
+    "PS_STORE_RESET",
+    "PS_SWAP",
+]
+
+OP_NOP, OP_EDGE, OP_FINAL = 0, 1, 2
+PS_KEEP, PS_RESET, PS_LOAD, PS_STORE_RESET, PS_SWAP = 0, 1, 2, 3, 4
+
+
+@dataclasses.dataclass(frozen=True)
+class AccelConfig:
+    """Hardware parameters (paper §V-A synthesis configuration)."""
+
+    num_cus: int = 64          # 2^N compute units
+    xi_words: int = 64         # x_i register file words per CU (2^M)
+    psum_words: int = 8        # psum register file words per CU (2^K)
+    num_banks: int = 64        # banked x-read ports across the interconnect
+    clock_mhz: float = 150.0   # paper runs at 150 MHz (half of DPU-v2)
+    alloc: str = "least_edges"  # node->CU allocation: least_edges | roundrobin
+    icr: bool = True           # intra-node edge computation reordering
+    psum_cache: bool = True    # partial-sum caching mechanism (§IV-B)
+    dataflow: str = "medium"   # medium | coarse
+    icr_window: int = 16       # per-CU ready-edge window examined by ICR
+
+    @property
+    def clock_period_s(self) -> float:
+        return 1.0 / (self.clock_mhz * 1e6)
+
+
+@dataclasses.dataclass
+class ScheduleStats:
+    """Everything the paper reports per benchmark (Figs. 9/10, Tables III/IV)."""
+
+    name: str
+    n: int
+    nnz: int
+    cycles: int
+    exec_edges: int
+    exec_finals: int
+    bnop: int = 0        # bank-conflict blocking
+    pnop: int = 0        # psum-capacity blocking
+    dnop: int = 0        # DAG-structure blocking (has tasks, all blocked)
+    lnop: int = 0        # load-imbalance blocking (task list drained)
+    snop: int = 0        # x_i register-file spill reload stalls (ours; tiny)
+    constraints: int = 0     # bank-coloring constraint pairs (Fig. 9d)
+    conflicts: int = 0       # unresolved same-bank collisions (Fig. 9e)
+    reuse_events: int = 0    # broadcast reads serving >1 CU (Fig. 9f)
+    distinct_reads: int = 0  # total distinct x reads across all cycles
+    spilled_values: int = 0
+    dm_escapes: int = 0      # emergency psum overflow parks (DESIGN.md §5)
+    per_cu_edges: np.ndarray | None = None
+    compile_seconds: float = 0.0
+
+    # -- paper metrics ---------------------------------------------------
+    def flops(self) -> int:
+        return 2 * self.nnz - self.n
+
+    def throughput_gops(self, cfg: AccelConfig) -> float:
+        return self.flops() / (self.cycles * cfg.clock_period_s) / 1e9
+
+    def peak_throughput_gops(self, cfg: AccelConfig) -> float:
+        """Equation 3 of the paper."""
+        p = cfg.num_cus
+        return (2.0 * p / cfg.clock_period_s) * (1.0 - self.n / (2.0 * self.nnz)) / 1e9
+
+    def utilization(self) -> float:
+        return (self.exec_edges + self.exec_finals) / (self.cycles * max(1, len(self.per_cu_edges)))
+
+    def load_balance_cv(self) -> float:
+        """Coefficient of variation (%) of input edges per CU (§V-B)."""
+        e = self.per_cu_edges.astype(np.float64)
+        return float(100.0 * e.std() / max(e.mean(), 1e-12))
+
+    def nop_breakdown(self) -> dict[str, float]:
+        total = self.cycles * max(1, len(self.per_cu_edges))
+        return {
+            "exec": (self.exec_edges + self.exec_finals) / total,
+            "bnop": self.bnop / total,
+            "pnop": self.pnop / total,
+            "dnop": self.dnop / total,
+            "lnop": self.lnop / total,
+            "snop": self.snop / total,
+        }
+
+
+@dataclasses.dataclass
+class Program:
+    """Compiled VLIW instruction stream + reordered stream memory."""
+
+    config: AccelConfig
+    n: int
+    opcode: np.ndarray     # [T, P] uint8
+    val_idx: np.ndarray    # [T, P] int32 index into `stream`
+    src_idx: np.ndarray    # [T, P] int32 x index (EDGE) / b index (FINAL)
+    out_idx: np.ndarray    # [T, P] int32 x write index (FINAL) else n
+    psum_ctrl: np.ndarray  # [T, P] uint8
+    psum_slot: np.ndarray  # [T, P] uint8
+    stream: np.ndarray     # [S] float32: L_ij / 1/L_ii in schedule order
+    stats: ScheduleStats
+    num_slots: int = 0     # executor psum RF size (psum_words + overflow used)
+
+    @property
+    def cycles(self) -> int:
+        return self.opcode.shape[0]
+
+    @property
+    def num_cus(self) -> int:
+        return self.opcode.shape[1]
+
+    def instruction_bits(self) -> int:
+        """Approximate instruction-memory footprint (Fig. 5a word layout)."""
+        import math
+
+        cfg = self.config
+        n_, m_, k_ = (
+            int(math.log2(cfg.num_cus)),
+            int(math.log2(cfg.xi_words)),
+            int(math.log2(cfg.psum_words)),
+        )
+        t_ = 14  # data-memory addressing depth 2^T
+        word = (1 + k_) + (1 + m_ + 1) + (1 + t_) + n_ + 2 + 2 + 2 + 1 + 1
+        return int(self.cycles * self.num_cus * word)

@@ -1,0 +1,10 @@
+"""Distributed substrate: sharding rules, elasticity, fault tolerance."""
+
+from .sharding import (  # noqa: F401
+    batch_sharding,
+    cache_shardings,
+    param_shardings,
+    with_dp_constraint,
+)
+from .fault_tolerance import HeartbeatMonitor, StragglerPolicy  # noqa: F401
+from .elastic import ElasticPlan, plan_remesh  # noqa: F401

@@ -1,0 +1,203 @@
+"""Sharding rules: params, activations, caches (DP / TP / EP / SP + pod axis).
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+  * DP  — batch over ("pod", "data")
+  * TP  — attention heads / FFN hidden / vocab over "model" (GSPMD handles
+          non-divisible head counts, e.g. starcoder2's 36 heads on 16 ways,
+          by padding)
+  * EP  — MoE expert axis over "model"
+  * SP  — long-context decode (global_batch=1): KV-cache/state *sequence*
+          over "data" instead of the unshardable batch axis
+
+Rules are (path-substring, partition-of-trailing-dims) pairs, most specific
+first; leading stacked-layer axes are padded with None automatically.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "dp_axes",
+    "param_shardings",
+    "batch_sharding",
+    "cache_shardings",
+    "with_dp_constraint",
+]
+
+
+def dp_axes(mesh: Mesh):
+    """Data-parallel mesh axes (includes 'pod' when present)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+# (substring, trailing-dims partition) — order matters.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    # embeddings / unembedding
+    ("emb/emb", ("model", None)),
+    ("lm_head/w", (None, "model")),
+    ("vis_proj/w", (None, None)),
+    # MoE: expert-parallel over model axis
+    ("moe/router/w", (None, None)),
+    ("moe/w1", ("model", None, None)),
+    ("moe/w2", ("model", None, None)),
+    ("moe/w3", ("model", None, None)),
+    # attention projections (also matches cross/ and shared/ blocks)
+    ("wq/w", (None, "model")),
+    ("wk/w", (None, "model")),
+    ("wv/w", (None, "model")),
+    ("wo/w", ("model", None)),
+    # RWKV channel-mix reuses wk/wv names but transposed roles
+    ("chan/wk/w", (None, "model")),
+    ("chan/wv/w", ("model", None)),
+    # MLPs
+    ("mlp/w1/w", (None, "model")),
+    ("mlp/w3/w", (None, "model")),
+    ("mlp/w2/w", ("model", None)),
+    ("dense_mlp/w1/w", (None, "model")),
+    ("dense_mlp/w3/w", (None, "model")),
+    ("dense_mlp/w2/w", ("model", None)),
+    # Mamba2
+    ("in_proj/w", (None, "model")),
+    ("out_proj/w", ("model", None)),
+    ("conv_w", (None, "model")),
+    # RWKV time-mix
+    ("time/ww/w", (None, "model")),
+    ("time/wr/w", (None, "model")),
+    ("time/wg/w", (None, "model")),
+    ("time/wo/w", ("model", None)),
+]
+# NOTE: "chan/wv/w" is shadowed by the generic "wv/w" rule above unless we
+# check specific rules first — handled by sorting below.
+_PARAM_RULES.sort(key=lambda r: -len(r[0]))
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _spec_for(path: str, ndim: int) -> P:
+    for pat, trailing in _PARAM_RULES:
+        if pat in path:
+            if len(trailing) > ndim:  # scalar-ish leaf
+                return P()
+            lead = (None,) * (ndim - len(trailing))
+            return P(*lead, *trailing)
+    return P()  # replicate (norms, biases, scalars)
+
+
+def spec_fits(mesh: Mesh, shape, spec: P) -> bool:
+    """Explicit jit arg shardings require exact divisibility per dim."""
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % size != 0:
+            return False
+    return True
+
+
+def param_shardings(mesh: Mesh, params):
+    """Rule-based shardings with divisibility fallback to replication.
+
+    Fallback examples in the zoo: whisper's 51865 vocab and granite-moe's
+    49155 vocab don't divide 16 (replicated embeddings, ~100-200MB);
+    mamba2's fused in_proj output (2*d_inner + 2*nh*ds + nh = 15400) is
+    deliberately NOT padded — the projection is replicated instead (its
+    activations still shard via the merged-B*H constraint downstream).
+    """
+
+    def one(path, leaf):
+        spec = _spec_for(_path_str(path), leaf.ndim)
+        if not spec_fits(mesh, leaf.shape, spec):
+            spec = P()
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_sharding(mesh: Mesh, batch_size: int):
+    """Sharding for [B, S] token/label arrays."""
+    dp = dp_axes(mesh)
+    if batch_size % dp_size(mesh) == 0:
+        return NamedSharding(mesh, P(dp, None))
+    return NamedSharding(mesh, P(None, None))
+
+
+def _kv_spec(ndim: int, b_ok: bool, dp) -> P:
+    """[..., B, S, H, D] KV cache: batch over dp + SEQUENCE over model.
+
+    Sequence-split KV (flash-decoding style) instead of kv-head split: the
+    zoo's kv-head counts (4..10) don't divide the 16-way model axis, and
+    GSPMD padding would multiply cache memory up to 4x.  The softmax over
+    the sharded seq dim reduces with small all-reduces.  When batch doesn't
+    divide dp (long_500k, B=1) the sequence shards over ALL axes — pure SP.
+    """
+    lead = (None,) * (ndim - 4)
+    if b_ok:
+        return P(*lead, dp, "model", None, None)
+    return P(*lead, None, (*dp, "model"), None, None)
+
+
+def cache_shardings(mesh: Mesh, cfg, cache, batch: int):
+    """Shardings for a decode cache pytree built by models.init_cache."""
+    dp = dp_axes(mesh)
+    b_ok = batch % dp_size(mesh) == 0
+
+    def one(path, leaf):
+        path_s = _path_str(path)
+        nd = leaf.ndim
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        if "kv/" in path_s or "cross_kv/" in path_s:
+            spec = _kv_spec(nd, b_ok, dp)
+            if not spec_fits(mesh, leaf.shape, spec):
+                # e.g. vlm cross-attn: 1601 vision tokens don't divide the
+                # model axis -> keep batch sharding, replicate the rest
+                spec = P(*([None] * (nd - 4)), dp if b_ok else None,
+                         None, None, None)
+            if not spec_fits(mesh, leaf.shape, spec):
+                spec = P()
+            return NamedSharding(mesh, spec)
+        if "_enc_out" in path_s or "_vis" in path_s:
+            spec = P(dp if b_ok else None, None, None)
+            return NamedSharding(mesh, spec if spec_fits(mesh, leaf.shape, spec)
+                                 else P())
+        if "state/" in path_s:
+            bspec = dp if b_ok else None
+            if cfg.family == "hybrid":
+                # state/0 conv [G,P,B,kw,C]; state/1 ssm [G,P,B,nh,ds,hd]
+                if "state/0" in path_s:
+                    spec = P(None, None, bspec, None, "model")
+                else:
+                    spec = P(None, None, bspec, "model", None, None)
+            elif "state/1" in path_s:
+                # rwkv: state/0,2 shift [L,B,1,d]; state/1 wkv [L,B,nh,ds,ds]
+                spec = P(None, bspec, "model", None, None)
+            else:
+                spec = P(None, bspec, None, None)
+            if not spec_fits(mesh, leaf.shape, spec):
+                # fall back: batch-only, then full replication
+                spec = P(*([None] * (nd - leaf.ndim)),
+                         *[bspec if i == (2 if cfg.family == "hybrid" else 1)
+                           else None for i in range(nd)])
+            if not spec_fits(mesh, leaf.shape, spec):
+                spec = P()
+            return NamedSharding(mesh, spec)
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def with_dp_constraint(x, mesh: Mesh):
+    """Constrain a [B, ...] activation to DP sharding."""
+    spec = P(dp_axes(mesh), *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,147 @@
+"""Flash attention Pallas kernel (TPU): online-softmax tiled attention.
+
+The perf-critical hot spot of every transformer arch in the zoo.  Standard
+FlashAttention-2 scheme adapted to TPU VMEM tiling:
+
+  grid = (batch*q_heads, num_q_blocks, num_kv_blocks)
+
+with the running max / normalizer / accumulator kept in VMEM scratch across
+the (sequential, innermost) kv-block axis and the output normalized and
+emitted on the last kv block.  Causal masking skips fully-masked kv blocks
+via `pl.when`.  Block sizes are BlockSpec parameters; MXU-aligned defaults
+(128) are chosen by ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,    # [1, Bq, D]
+    k_ref,    # [1, Bk, D]
+    v_ref,    # [1, Bk, D]
+    o_ref,    # [1, Bq, D]
+    m_ref,    # scratch [Bq]
+    l_ref,    # scratch [Bq]
+    acc_ref,  # scratch [Bq, D]
+    *,
+    scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    num_kv_blocks: int,
+    seq_len: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32) * scale
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [Bq, Bk]
+
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = cols < seq_len
+        if causal:
+            mask &= rows >= cols
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_ref[...] = l_prev * alpha + p.sum(axis=-1)
+        m_ref[...] = m_cur
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+
+    if causal:
+        # skip kv blocks strictly above the diagonal band
+        pl.when(k_start <= q_start + block_q - 1)(compute)
+    else:
+        compute()
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _emit():
+        l = l_ref[...]
+        norm = jnp.where(l > 0, 1.0 / jnp.where(l > 0, l, 1.0), 0.0)
+        o_ref[0] = (acc_ref[...] * norm[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret", "scale"),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,  # [BH, Lq, D]
+    k: jnp.ndarray,  # [BH, Lk, D]
+    v: jnp.ndarray,  # [BH, Lk, D]
+    *,
+    scale: float,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    bh, lq, d = q.shape
+    lk = k.shape[1]
+    pad_q = (-lq) % block_q
+    pad_k = (-lk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    nq = (lq + pad_q) // block_q
+    nk = (lk + pad_k) // block_k
+
+    kernel = functools.partial(
+        _kernel,
+        scale=scale,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        num_kv_blocks=nk,
+        seq_len=lk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, lq + pad_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :lq]

@@ -1,0 +1,143 @@
+"""Public attention op with GQA head mapping and pallas/jnp dispatch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_blocked, attention_ref
+
+__all__ = ["gqa_attention", "merged_bh_constraint", "attention_fold_specs"]
+
+# jnp path switches to blocked online-softmax attention above this kv length
+BLOCKED_ATTN_THRESHOLD = 8192
+
+
+def _axis_sizes(flags):
+    import numpy as np
+
+    mesh = flags.mesh
+    dp = tuple(flags.dp)
+    dp_n = int(np.prod([mesh.shape[a] for a in dp]))
+    model_n = int(mesh.shape["model"]) if "model" in mesh.axis_names else 1
+    return dp, dp_n, model_n
+
+
+def attention_fold_specs(flags, bh: int, lq: int, is_kv: bool = False):
+    """Sharding policy for folded [B*H, L, D] attention tensors.
+
+    Priority (DESIGN/EXPERIMENTS §Perf):
+      1. merged batch*head over ALL axes (always even, no head padding) when
+         bh divides dp*model;
+      2. otherwise bh over dp + QUERY SEQUENCE over model (sequence-parallel
+         attention — e.g. starcoder2: bh=32*36=1152 doesn't divide 256, but
+         1152%16==0 and 32768%16==0); kv tensors stay batch-sharded only
+         (their sequence dim is the contraction);
+      3. otherwise bh over dp only;
+      4. otherwise no constraint.
+    Returns a PartitionSpec or None.
+    """
+    if flags is None or getattr(flags, "mesh", None) is None:
+        return None
+    from jax.sharding import PartitionSpec as P
+
+    dp, dp_n, model_n = _axis_sizes(flags)
+    if bh % (dp_n * model_n) == 0:
+        return P((*dp, "model"), None, None)
+    if bh % dp_n == 0 and lq % model_n == 0 and not is_kv:
+        return P(dp, "model", None)
+    if bh % dp_n == 0:
+        return P(dp, None, None)
+    return None
+
+
+def constrain_folded(xf: jnp.ndarray, flags, bh: int, is_kv: bool = False):
+    spec = attention_fold_specs(flags, bh, xf.shape[1], is_kv=is_kv)
+    if spec is None:
+        return xf
+    import jax as _jax
+    from jax.sharding import NamedSharding
+
+    return _jax.lax.with_sharding_constraint(
+        xf, NamedSharding(flags.mesh, spec)
+    )
+
+
+def merged_bh_constraint(xf: jnp.ndarray, flags, bh: int) -> jnp.ndarray:
+    """Constrain a folded [B*H, L, D] tensor per `attention_fold_specs`."""
+    return constrain_folded(xf, flags, bh)
+
+
+def gqa_attention_folded(
+    qf: jnp.ndarray,  # [B*Hq, Lq, D]  (b-major, consecutive heads per kv head)
+    kf: jnp.ndarray,  # [B*Hkv, Lk, D]
+    vf: jnp.ndarray,  # [B*Hkv, Lk, D]
+    *,
+    batch: int,
+    causal: bool = True,
+    use_pallas: bool = False,
+    interpret: bool = True,
+    block_q: int = 128,
+    block_k: int = 1024,
+    flags=None,
+) -> jnp.ndarray:
+    """GQA attention entirely in folded space.
+
+    KV heads are broadcast to query heads with a reshape-broadcast in the
+    merged dim (never `jnp.repeat` on [B, L, H, D] — uneven head sharding
+    replicates there); the merged dim's sharding survives because the outer
+    factors of the reshape are preserved.
+    """
+    bhq, lq, d = qf.shape
+    bhkv, lk, _ = kf.shape
+    hq, hkv = bhq // batch, bhkv // batch
+    g = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+    if g > 1:
+        def rep(t):
+            t = t.reshape(batch, hkv, 1, lk, d)
+            t = jnp.broadcast_to(t, (batch, hkv, g, lk, d))
+            return t.reshape(bhq, lk, d)
+        kq, vq = rep(kf), rep(vf)
+    else:
+        kq, vq = kf, vf
+    if use_pallas:
+        return flash_attention_pallas(
+            qf, kq, vq, scale=scale, causal=causal,
+            block_q=block_q, block_k=block_k, interpret=interpret,
+        )
+    if lk > BLOCKED_ATTN_THRESHOLD:
+        return attention_blocked(qf, kq, vq, scale=scale, causal=causal,
+                                 block_k=block_k)
+    return attention_ref(qf, kq, vq, scale=scale, causal=causal)
+
+
+def gqa_attention(
+    q: jnp.ndarray,  # [B, Lq, Hq, D]
+    k: jnp.ndarray,  # [B, Lk, Hkv, D]
+    v: jnp.ndarray,  # [B, Lk, Hkv, D]
+    *,
+    causal: bool = True,
+    use_pallas: bool = False,
+    interpret: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    flags=None,
+) -> jnp.ndarray:
+    """Grouped-query attention on [B, L, H, D] tensors (wraps the folded
+    implementation; models fold earlier themselves — see layers.attention)."""
+    b, lq, hq, d = q.shape
+    hkv = k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    fold = lambda x, h: x.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    qf = constrain_folded(fold(q, hq), flags, b * hq)
+    kf = constrain_folded(fold(k, hkv), flags, b * hkv, is_kv=True)
+    vf = constrain_folded(fold(v, hkv), flags, b * hkv, is_kv=True)
+    of = gqa_attention_folded(
+        qf, kf, vf, batch=b, causal=causal, use_pallas=use_pallas,
+        interpret=interpret, block_q=block_q, block_k=block_k, flags=flags,
+    )
+    of = constrain_folded(of, flags, b * hq)
+    return of.reshape(b, hq, lq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles: exact softmax attention + blocked (online-softmax)
+variant for long sequences.
+
+`attention_blocked` is the XLA-path equivalent of the Pallas flash kernel:
+a `lax.scan` over kv blocks carrying (running max, normalizer, accumulator)
+so the [L, L] score matrix is never materialized — required for the
+prefill_32k / train_4k dry-run cells to fit HBM (an exact-softmax 32k x 32k
+f32 score tensor is 4 GB per head).  Causal masking is applied per block
+(the fully-masked upper blocks still execute — a 2x flop overhead on causal
+traded for O(L*block) memory; see EXPERIMENTS.md §Perf)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "attention_blocked"]
+
+
+def attention_ref(
+    q: jnp.ndarray,  # [BH, Lq, D]
+    k: jnp.ndarray,  # [BH, Lk, D]
+    v: jnp.ndarray,  # [BH, Lk, D]
+    *,
+    scale: float,
+    causal: bool = True,
+) -> jnp.ndarray:
+    f32 = jnp.float32
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(f32) * scale, k.astype(f32))
+    if causal:
+        lq, lk = s.shape[-2], s.shape[-1]
+        mask = jnp.arange(lq)[:, None] >= jnp.arange(lk)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(f32)).astype(q.dtype)
+
+
+def attention_blocked(
+    q: jnp.ndarray,  # [BH, Lq, D]
+    k: jnp.ndarray,  # [BH, Lk, D]
+    v: jnp.ndarray,  # [BH, Lk, D]
+    *,
+    scale: float,
+    causal: bool = True,
+    block_k: int = 1024,
+) -> jnp.ndarray:
+    f32 = jnp.float32
+    bh, lq, d = q.shape
+    lk = k.shape[1]
+    pad = (-lk) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+    nk = (lk + pad) // block_k
+    qf = q.astype(f32) * scale
+    kb = k.astype(f32).reshape(bh, nk, block_k, d).transpose(1, 0, 2, 3)
+    vb = v.astype(f32).reshape(bh, nk, block_k, d).transpose(1, 0, 2, 3)
+    rows = jnp.arange(lq)[None, :, None]  # [1, Lq, 1]
+
+    def body(carry, blk):
+        m_prev, l_prev, acc = carry
+        kc, vc, j = blk
+        s = jnp.einsum("bqd,bkd->bqk", qf, kc)
+        cols = j * block_k + jnp.arange(block_k)[None, None, :]
+        mask = cols < lk
+        if causal:
+            mask &= rows >= cols
+        s = jnp.where(mask, s, -1e30)
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        pexp = jnp.exp(s - m_cur[..., None])
+        l_cur = l_prev * alpha + pexp.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bqk,bkd->bqd", pexp, vc)
+        return (m_cur, l_cur, acc), None
+
+    m0 = jnp.full((bh, lq), -1e30, f32)
+    l0 = jnp.zeros((bh, lq), f32)
+    a0 = jnp.zeros((bh, lq, d), f32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kb, vb, jnp.arange(nk))
+    )
+    norm = jnp.where(l > 0, 1.0 / jnp.where(l > 0, l, 1.0), 0.0)
+    return (acc * norm[..., None]).astype(q.dtype)

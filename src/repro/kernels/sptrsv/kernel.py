@@ -1,0 +1,148 @@
+"""Pallas TPU kernel executing a compiled SpTRSV VLIW instruction stream.
+
+TPU adaptation of the paper's accelerator (DESIGN.md §1):
+  * the 64 CUs map onto a 64-wide vector lane dimension;
+  * the x_i / psum register files and the solution vector live in VMEM
+    scratch (the software-managed scratchpads of the paper);
+  * the instruction stream is tiled HBM->VMEM in cycle blocks via BlockSpec
+    ("data in the instruction memory ... is accessed sequentially", §III-B);
+  * stream-memory values are pre-gathered per instruction word by the
+    compiler wrapper (ops.py), so the kernel reads them sequentially too.
+
+Grid: one dimension over cycle blocks; the solve state (x, feedback, psum
+register file) is carried across grid steps in VMEM scratch, and x is
+written to the output on the last step.
+
+The kernel is branch-free: every cycle executes the same gather/FMA/select/
+scatter pattern for all lanes, with opcodes selecting behaviour via
+`jnp.where` — the VLIW philosophy carried into the VPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.program import (
+    OP_EDGE,
+    OP_FINAL,
+    PS_LOAD,
+    PS_RESET,
+    PS_STORE_RESET,
+    PS_SWAP,
+)
+
+__all__ = ["sptrsv_pallas"]
+
+
+def _kernel(
+    # inputs (blocked over cycles)
+    op_ref,     # [TB, P] int32
+    val_ref,    # [TB, P] f32   (pre-gathered stream values)
+    src_ref,    # [TB, P] int32
+    out_ref,    # [TB, P] int32
+    ctl_ref,    # [TB, P] int32
+    slt_ref,    # [TB, P] int32
+    b_ref,      # [n_pad]  f32  (whole vector each step)
+    # outputs
+    x_out_ref,  # [n_pad]  f32
+    # scratch
+    x_ref,      # [n_pad]  f32
+    fb_ref,     # [P]      f32
+    rf_ref,     # [P, S]   f32
+    *,
+    cycles_per_block: int,
+    num_blocks: int,
+):
+    g = pl.program_id(0)
+
+    @pl.when(g == 0)
+    def _init():
+        x_ref[...] = jnp.zeros_like(x_ref)
+        fb_ref[...] = jnp.zeros_like(fb_ref)
+        rf_ref[...] = jnp.zeros_like(rf_ref)
+
+    lanes = jax.lax.iota(jnp.int32, fb_ref.shape[0])
+    b = b_ref[...]
+
+    def cycle(t, carry):
+        x, fb, rf = carry
+        op = op_ref[t, :]
+        v = val_ref[t, :]
+        si = src_ref[t, :]
+        oi = out_ref[t, :]
+        ct = ctl_ref[t, :]
+        sl = slt_ref[t, :]
+
+        pv = fb
+        slot_val = rf[lanes, sl]
+        pv = jnp.where(ct == PS_RESET, 0.0, pv)
+        pv = jnp.where(ct == PS_LOAD, slot_val, pv)
+        store_val = jnp.where((ct == PS_STORE_RESET) | (ct == PS_SWAP), fb, slot_val)
+        rf = rf.at[lanes, sl].set(store_val)
+        pv = jnp.where(ct == PS_STORE_RESET, 0.0, pv)
+        pv = jnp.where(ct == PS_SWAP, slot_val, pv)
+
+        pv = jnp.where(op == OP_EDGE, pv + v * jnp.take(x, si), pv)
+        outv = (jnp.take(b, si) - pv) * v
+        widx = jnp.where(op == OP_FINAL, oi, x.shape[0] - 1)  # dummy tail slot
+        x = x.at[widx].set(jnp.where(op == OP_FINAL, outv, jnp.take(x, widx)))
+        return x, pv, rf
+
+    x, fb, rf = jax.lax.fori_loop(
+        0, cycles_per_block, cycle, (x_ref[...], fb_ref[...], rf_ref[...])
+    )
+    x_ref[...] = x
+    fb_ref[...] = fb
+    rf_ref[...] = rf
+
+    @pl.when(g == num_blocks - 1)
+    def _emit():
+        x_out_ref[...] = x
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cycles_per_block", "num_slots", "interpret"),
+)
+def sptrsv_pallas(
+    opcode: jnp.ndarray,   # [T, P] int32 (T padded to a block multiple)
+    values: jnp.ndarray,   # [T, P] f32
+    src_idx: jnp.ndarray,  # [T, P] int32
+    out_idx: jnp.ndarray,  # [T, P] int32
+    ctrl: jnp.ndarray,     # [T, P] int32
+    slot: jnp.ndarray,     # [T, P] int32
+    b: jnp.ndarray,        # [n_pad] f32 (n + 1 dummy tail slot)
+    *,
+    cycles_per_block: int = 128,
+    num_slots: int = 12,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    t, p = opcode.shape
+    assert t % cycles_per_block == 0, "pad the instruction stream first"
+    num_blocks = t // cycles_per_block
+    n_pad = b.shape[0]
+
+    instr_spec = pl.BlockSpec((cycles_per_block, p), lambda g: (g, 0))
+    full_spec = pl.BlockSpec((n_pad,), lambda g: (0,))
+
+    kernel = functools.partial(
+        _kernel, cycles_per_block=cycles_per_block, num_blocks=num_blocks
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(num_blocks,),
+        in_specs=[instr_spec] * 6 + [full_spec],
+        out_specs=full_spec,
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((n_pad,), jnp.float32),
+            pltpu.VMEM((p,), jnp.float32),
+            pltpu.VMEM((p, num_slots), jnp.float32),
+        ],
+        interpret=interpret,
+    )(opcode, values, src_idx, out_idx, ctrl, slot, b)

@@ -1,0 +1,66 @@
+"""Jitted wrapper: run a compiled `Program` through the Pallas kernel."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.program import Program
+from repro.core.schedule import PSUM_OVERFLOW_SLOTS
+
+from .kernel import sptrsv_pallas
+
+__all__ = ["solve"]
+
+
+def _pad_to(arr: np.ndarray, t_pad: int, fill=0) -> np.ndarray:
+    t, p = arr.shape
+    if t == t_pad:
+        return arr
+    out = np.full((t_pad, p), fill, dtype=arr.dtype)
+    out[:t] = arr
+    return out
+
+
+def solve(
+    prog: Program,
+    b: np.ndarray,
+    *,
+    cycles_per_block: int = 128,
+    interpret: bool = True,
+) -> np.ndarray:
+    """Solve Lx=b by executing `prog` in the Pallas kernel.
+
+    The wrapper performs the compiler-side data staging the hardware's
+    stream memory provides: values are pre-gathered per instruction word so
+    the kernel streams them sequentially (no positional indirection, as in
+    the paper's stream-memory design).
+    """
+    t, p = prog.opcode.shape
+    t_pad = -(-t // cycles_per_block) * cycles_per_block
+
+    values = prog.stream[prog.val_idx]          # [T, P] pre-gathered
+    values = values * (prog.opcode != 0)        # NOP lanes -> 0.0
+    n_pad = prog.n + 1
+
+    args = [
+        _pad_to(prog.opcode.astype(np.int32), t_pad),
+        _pad_to(values.astype(np.float32), t_pad),
+        _pad_to(prog.src_idx.astype(np.int32), t_pad),
+        _pad_to(prog.out_idx.astype(np.int32), t_pad, fill=prog.n),
+        _pad_to(prog.psum_ctrl.astype(np.int32), t_pad),
+        _pad_to(prog.psum_slot.astype(np.int32), t_pad),
+    ]
+    b_pad = np.zeros(n_pad, dtype=np.float32)
+    b_pad[: prog.n] = b
+    n_slots = max(prog.config.psum_words + PSUM_OVERFLOW_SLOTS,
+                  prog.num_slots or 0)
+    x = sptrsv_pallas(
+        *[jnp.asarray(a) for a in args],
+        jnp.asarray(b_pad),
+        cycles_per_block=cycles_per_block,
+        num_slots=n_slots,
+        interpret=interpret,
+    )
+    return np.asarray(x)[: prog.n]

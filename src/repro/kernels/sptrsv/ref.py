@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the SpTRSV kernels.
+
+Two oracles:
+  * `solve_dense` — dense lower-triangular back-substitution in jnp
+    (mathematical ground truth, independent of the compiler);
+  * `solve_program` — the `lax.scan` executor over the instruction stream
+    (checks the kernel against the exact program semantics).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.csr import TriCSR
+from repro.core.executor import execute_jax
+from repro.core.program import Program
+
+__all__ = ["solve_dense", "solve_program"]
+
+
+def solve_dense(mat: TriCSR, b: np.ndarray) -> np.ndarray:
+    """jnp dense forward substitution (O(n^2), oracle only)."""
+    dense = jnp.asarray(mat.to_dense(), dtype=jnp.float64)
+    n = mat.n
+    x = jnp.zeros(n, dtype=jnp.float64)
+
+    def body(i, x):
+        s = jnp.dot(dense[i, :], x)
+        return x.at[i].set((b[i] - s + dense[i, i] * x[i]) / dense[i, i])
+
+    import jax
+
+    return np.asarray(jax.lax.fori_loop(0, n, body, x))
+
+
+def solve_program(prog: Program, b: np.ndarray) -> np.ndarray:
+    return execute_jax(prog, b)

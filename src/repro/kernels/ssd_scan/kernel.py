@@ -1,0 +1,126 @@
+"""Chunked linear-recurrence (SSD/GLA/WKV) Pallas kernel.
+
+This is the paper's medium-granularity dataflow instantiated for sequence
+models (DESIGN.md §1): a gated linear recurrence
+
+    S_t = diag(exp(w_t)) S_{t-1} + k_t v_t^T          (w_t <= 0: log-decay)
+    y_t = S_t^T q_t            (inclusive — Mamba2/GLA convention)
+    y_t = S_{t-1}^T q_t        (exclusive — RWKV convention; the u-bonus
+                                diagonal term is added by ops.py)
+
+is a unit-lower-bidiagonal SpTRSV in S.  The three dataflow granularities
+map to: sequential scan (coarse), parallel prefix scan (fine, 2x ops), and
+THIS kernel (medium): chunks of length Q are the "coarse allocation" — the
+intra-chunk work is computed in parallel with MXU matmuls (fine edge
+computation) while the inter-chunk state S is the psum feedback register
+carried across grid steps in VMEM scratch.
+
+Numerics: all exponentials are of non-positive arguments except the
+intra-chunk `exp(-cums)` factor, which is bounded by exp(-Q * min w) —
+ops.py clamps per-step log-decay so this stays within f32 (documented).
+
+Grid: (batch*heads, num_chunks); TPU iterates the trailing axis fastest, so
+for each (b,h) the chunks run sequentially and the state scratch carries.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["chunked_scan_pallas"]
+
+
+def _kernel(
+    q_ref,   # [1, Q, K]
+    k_ref,   # [1, Q, K]
+    v_ref,   # [1, Q, V]
+    w_ref,   # [1, Q, K]  log-decay (<= 0)
+    s0_ref,  # [1, K, V]  initial state for this (b,h)
+    y_ref,   # [1, Q, V]  output block
+    sf_ref,  # [1, K, V]  final state output
+    s_ref,   # scratch [K, V] f32
+    *,
+    num_chunks: int,
+    inclusive: bool,
+):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[...] = s0_ref[0]
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    s = s_ref[...]
+
+    cums = jnp.cumsum(w, axis=0)            # [Q, K], inclusive
+    total = cums[-1:, :]                    # [1, K]
+    cums_q = cums if inclusive else cums - w
+
+    qd = q * jnp.exp(cums_q)                # decay-from-chunk-start applied
+    kd_neg = k * jnp.exp(-cums)             # bounded by ops.py decay clamp
+    kd_end = k * jnp.exp(total - cums)      # decay-to-chunk-end (<= 1)
+
+    qlen = q.shape[0]
+    row = jax.lax.broadcasted_iota(jnp.int32, (qlen, qlen), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (qlen, qlen), 1)
+    mask = (row >= col) if inclusive else (row > col)
+
+    attn = jnp.dot(qd, kd_neg.T, preferred_element_type=jnp.float32)
+    attn = jnp.where(mask, attn, 0.0)
+    y = jnp.dot(attn, v, preferred_element_type=jnp.float32)       # intra-chunk
+    y = y + jnp.dot(qd, s, preferred_element_type=jnp.float32)     # inter-chunk
+
+    s_ref[...] = s * jnp.exp(total).T + jnp.dot(
+        kd_end.T, v, preferred_element_type=jnp.float32
+    )
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(c == num_chunks - 1)
+    def _final():
+        sf_ref[0] = s_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "inclusive", "interpret")
+)
+def chunked_scan_pallas(
+    q: jnp.ndarray,   # [BH, L, K]
+    k: jnp.ndarray,   # [BH, L, K]
+    v: jnp.ndarray,   # [BH, L, V]
+    w: jnp.ndarray,   # [BH, L, K] log-decay
+    s0: jnp.ndarray,  # [BH, K, V]
+    *,
+    chunk: int = 64,
+    inclusive: bool = True,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    bh, seq, kdim = q.shape
+    vdim = v.shape[-1]
+    assert seq % chunk == 0, "pad sequence to a chunk multiple"
+    nc = seq // chunk
+
+    blk = lambda d: pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0))
+    state_spec = pl.BlockSpec((1, kdim, vdim), lambda b, c: (b, 0, 0))
+
+    kernel = functools.partial(_kernel, num_chunks=nc, inclusive=inclusive)
+    y, sf = pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[blk(kdim), blk(kdim), blk(vdim), blk(kdim), state_spec],
+        out_specs=[blk(vdim), state_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, seq, vdim), q.dtype),
+            jax.ShapeDtypeStruct((bh, kdim, vdim), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((kdim, vdim), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, w, s0)
+    return y, sf

@@ -1,0 +1,147 @@
+"""Public chunked-scan op: shape handling, decay clamping, RWKV u-bonus.
+
+`linear_recurrence` is the single entry point used by the Mamba2 and RWKV6
+blocks (repro.models).  It accepts [B, L, H, D]-shaped tensors, merges
+batch/head dims, pads the sequence to the chunk size, and dispatches to the
+Pallas kernel (TPU production path / interpret validation) or the chunked
+pure-jnp path (`use_pallas=False`, used on CPU and in the distributed
+dry-run — identical math, same chunking, no pallas_call).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import chunked_scan_pallas
+from .ref import scan_ref
+
+__all__ = ["linear_recurrence", "MIN_LOG_DECAY"]
+
+# exp(-MIN_LOG_DECAY * chunk) must stay inside f32: 64 * 0.25 = 16 -> e^16 ~ 9e6.
+MIN_LOG_DECAY = -0.25
+
+
+def _chunked_jnp(q, k, v, w, s0, *, chunk: int, inclusive: bool):
+    """Same medium-granularity algorithm as the kernel, in plain jnp."""
+    bh, seq, kdim = q.shape
+    vdim = v.shape[-1]
+    nc = seq // chunk
+    shp = lambda x, d: x.reshape(bh, nc, chunk, d)
+    q, k, w = shp(q, kdim), shp(k, kdim), shp(w, kdim)
+    v = shp(v, vdim)
+
+    cums = jnp.cumsum(w, axis=2)
+    total = cums[:, :, -1:, :]
+    cums_q = cums if inclusive else cums - w
+    qd = q * jnp.exp(cums_q)
+    kd_neg = k * jnp.exp(-cums)
+    kd_end = k * jnp.exp(total - cums)
+
+    row = jnp.arange(chunk)[:, None]
+    col = jnp.arange(chunk)[None, :]
+    mask = (row >= col) if inclusive else (row > col)
+    attn = jnp.einsum("bntk,bnsk->bnts", qd, kd_neg) * mask
+    y_intra = jnp.einsum("bnts,bnsv->bntv", attn, v)
+
+    def chunk_step(s, inp):
+        qd_c, kd_c, v_c, tot_c = inp
+        y_inter = qd_c @ s
+        s_new = s * jnp.exp(tot_c).reshape(kdim, 1) + kd_c.T @ v_c
+        return s_new, y_inter
+
+    def per_bh(s0_b, qd_b, kd_b, v_b, tot_b):
+        return jax.lax.scan(chunk_step, s0_b, (qd_b, kd_b, v_b, tot_b))
+
+    sf, y_inter = jax.vmap(per_bh)(s0, qd, kd_end, v, total[:, :, 0, :])
+    y = (y_intra + y_inter).reshape(bh, seq, vdim)
+    return y, sf
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("chunk", "inclusive", "use_pallas", "interpret", "flags"),
+)
+def linear_recurrence(
+    q: jnp.ndarray,           # [B, L, H, K]
+    k: jnp.ndarray,           # [B, L, H, K]
+    v: jnp.ndarray,           # [B, L, H, V]
+    log_decay: jnp.ndarray,   # [B, L, H, K], clamped to [MIN_LOG_DECAY, 0]
+    s0: jnp.ndarray | None = None,   # [B, H, K, V]
+    u_bonus: jnp.ndarray | None = None,  # [H, K] (RWKV exclusive mode)
+    *,
+    chunk: int = 64,
+    inclusive: bool = True,
+    use_pallas: bool = False,
+    interpret: bool = True,
+    flags=None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    b, seq, h, kdim = q.shape
+    vdim = v.shape[-1]
+    in_dtype = q.dtype
+    w = jnp.clip(log_decay, MIN_LOG_DECAY, 0.0)
+
+    if seq <= 4:
+        # decode fast path: direct recurrence steps — padding a 1-token
+        # decode to a full chunk would waste chunk/seq x compute+memory
+        f32 = jnp.float32
+        s = (jnp.zeros((b, h, kdim, vdim), f32) if s0 is None
+             else s0.astype(f32))
+        ys = []
+        for tstep in range(seq):
+            qt, kt, vt, wt = (a[:, tstep].astype(f32) for a in (q, k, v, w))
+            if not inclusive:
+                y = jnp.einsum("bhk,bhkv->bhv", qt, s)
+            s = s * jnp.exp(wt)[..., None] + jnp.einsum(
+                "bhk,bhv->bhkv", kt, vt)
+            if inclusive:
+                y = jnp.einsum("bhk,bhkv->bhv", qt, s)
+            ys.append(y)
+        y = jnp.stack(ys, axis=1)                       # [B, seq, H, V]
+        if u_bonus is not None:
+            gate = jnp.einsum("blhk,hk,blhk->blh", q.astype(f32),
+                              u_bonus.astype(f32), k.astype(f32))
+            y = y + gate[..., None] * v.astype(f32)
+        return y.astype(in_dtype), s
+
+    pad = (-seq) % chunk
+    if pad:
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v, w = zpad(q), zpad(k), zpad(v), zpad(w)
+    seq_p = seq + pad
+
+    from repro.kernels.flash_attention.ops import merged_bh_constraint
+
+    merge = lambda x, d: merged_bh_constraint(
+        x.transpose(0, 2, 1, 3).reshape(b * h, seq_p, d), flags, b * h
+    )
+    qm, km, wm = merge(q, kdim), merge(k, kdim), merge(w, kdim)
+    vm = merge(v, vdim)
+    s0m = (
+        jnp.zeros((b * h, kdim, vdim), jnp.float32)
+        if s0 is None
+        else s0.reshape(b * h, kdim, vdim).astype(jnp.float32)
+    )
+    s0m = merged_bh_constraint(s0m, flags, b * h)
+
+    f32 = jnp.float32
+    if use_pallas:
+        y, sf = chunked_scan_pallas(
+            qm.astype(f32), km.astype(f32), vm.astype(f32), wm.astype(f32),
+            s0m, chunk=chunk, inclusive=inclusive, interpret=interpret,
+        )
+    else:
+        y, sf = _chunked_jnp(
+            qm.astype(f32), km.astype(f32), vm.astype(f32), wm.astype(f32),
+            s0m, chunk=chunk, inclusive=inclusive,
+        )
+
+    y = y.reshape(b, h, seq_p, vdim).transpose(0, 2, 1, 3)[:, :seq]
+    if u_bonus is not None:
+        # RWKV diagonal bonus: y_t += (q_t . (u ⊙ k_t)) v_t
+        gate = jnp.einsum("blhk,hk,blhk->blh", q.astype(f32)[:, :seq],
+                          u_bonus.astype(f32), k.astype(f32)[:, :seq])
+        y = y + gate[..., None] * v.astype(f32)[:, :seq]
+    return y.astype(in_dtype), sf.reshape(b, h, kdim, vdim)

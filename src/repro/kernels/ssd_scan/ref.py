@@ -1,0 +1,41 @@
+"""Pure-jnp sequential oracle for the chunked linear recurrence.
+
+This is the "coarse dataflow" execution of the same recurrence: a plain
+`lax.scan` carrying the [K, V] state one step at a time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["scan_ref"]
+
+
+def scan_ref(
+    q: jnp.ndarray,   # [BH, L, K]
+    k: jnp.ndarray,   # [BH, L, K]
+    v: jnp.ndarray,   # [BH, L, V]
+    w: jnp.ndarray,   # [BH, L, K] log-decay
+    s0: jnp.ndarray,  # [BH, K, V]
+    *,
+    inclusive: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    def one(s0_bh, qkvw):
+        q_b, k_b, v_b, w_b = qkvw
+
+        def step(s, inp):
+            qt, kt, vt, wt = inp
+            s_new = s * jnp.exp(wt)[:, None] + jnp.outer(kt, vt)
+            y = (qt @ s_new) if inclusive else (qt @ s)
+            return s_new, y
+
+        s_fin, y = jax.lax.scan(step, s0_bh, (q_b, k_b, v_b, w_b))
+        return y, s_fin
+
+    f32 = jnp.float32
+    y, sf = jax.vmap(one)(
+        s0.astype(f32),
+        (q.astype(f32), k.astype(f32), v.astype(f32), w.astype(f32)),
+    )
+    return y.astype(q.dtype), sf

@@ -1,0 +1,160 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first backend initialization (see the dry-run spec).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers the appropriate step (train_step / prefill_step / serve_step)
+     with ShapeDtypeStruct inputs and explicit NamedShardings,
+  3. compiles, prints memory_analysis() (proves it fits) and
+     cost_analysis() (flops/bytes),
+  4. runs the trip-count-aware HLO analyzer for collective bytes,
+  5. writes results/dryrun/<arch>__<shape>__<mesh>.json for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all          # driver: subprocess per cell
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, get_config, list_archs
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, cell_skipped
+from repro.launch.steps import build_cell
+from repro.models import RuntimeFlags
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             remat: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = cell_skipped(cfg, shape)
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "kind": shape.kind, "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+    }
+    if skip:
+        record["skipped"] = skip
+        return record
+
+    from repro.distributed.sharding import dp_axes
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    flags = RuntimeFlags(
+        use_pallas=False, interpret=False,
+        remat=(remat and shape.kind == "train"),
+        mesh=mesh, dp=dp_axes(mesh),
+    )
+    fn, args, in_shardings, out_shardings = build_cell(cfg, shape, mesh, flags)
+
+    t0 = time.perf_counter()
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_shardings,
+                         out_shardings=out_shardings)
+        lowered = jitted.lower(*args)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t2 = time.perf_counter()
+
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            if hasattr(mem, attr):
+                mem_rec[attr] = int(getattr(mem, attr))
+    print(f"[{arch} x {shape_name} x {mesh_kind}] memory_analysis:", mem_rec)
+
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, list) else (ca or {})
+    ca_rec = {k: float(v) for k, v in ca.items()
+              if k in ("flops", "bytes accessed", "transcendentals")}
+    print(f"[{arch} x {shape_name} x {mesh_kind}] cost_analysis:", ca_rec)
+
+    hlo = hlo_analysis.analyze_hlo(compiled.as_text())
+    record.update({
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "memory_analysis": mem_rec,
+        "cost_analysis": ca_rec,
+        "hlo": {k: float(v) for k, v in hlo.items()},
+        "collective_bytes": float(hlo.collective_bytes),
+        "devices": int(len(mesh.devices.reshape(-1))),
+    })
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_kind}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["pod", "multipod"], default="pod")
+    ap.add_argument("--all", action="store_true",
+                    help="run every cell in a subprocess each")
+    ap.add_argument("--meshes", default="pod,multipod")
+    ap.add_argument("--out", default=os.path.normpath(RESULTS_DIR))
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        failures = []
+        for arch in ASSIGNED_ARCHS:
+            for shape_name in SHAPES:
+                for mesh_kind in args.meshes.split(","):
+                    path = os.path.join(
+                        args.out, f"{arch}__{shape_name}__{mesh_kind}.json"
+                    )
+                    if args.skip_existing and os.path.exists(path):
+                        print("skip existing", path)
+                        continue
+                    cfg = get_config(arch)
+                    if cell_skipped(cfg, SHAPES[shape_name]):
+                        os.makedirs(args.out, exist_ok=True)
+                        with open(path, "w") as f:
+                            json.dump(run_cell(arch, shape_name, mesh_kind,
+                                               args.out), f, indent=1)
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape_name,
+                           "--mesh", mesh_kind, "--out", args.out]
+                    print(">>", " ".join(cmd), flush=True)
+                    r = subprocess.run(cmd)
+                    if r.returncode != 0:
+                        failures.append((arch, shape_name, mesh_kind))
+        if failures:
+            print("FAILED cells:", failures)
+            sys.exit(1)
+        print("all cells OK")
+        return
+
+    assert args.arch and args.shape
+    rec = run_cell(args.arch, args.shape, args.mesh, args.out,
+                   remat=not args.no_remat)
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k not in ("hlo",)}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

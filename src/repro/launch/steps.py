@@ -1,0 +1,152 @@
+"""Jitted step factories shared by train.py / serve.py / dryrun.py.
+
+Builds (step_fn, example_inputs, in_shardings, out_shardings) per
+(arch x shape x mesh) cell; inputs are ShapeDtypeStructs (no allocation) so
+the same factory serves both the real launchers and the AOT dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import (
+    batch_sharding,
+    cache_shardings,
+    dp_axes,
+    param_shardings,
+)
+from repro.models import (
+    RuntimeFlags,
+    decode_step,
+    init_cache,
+    init_params,
+    prefill,
+    train_forward,
+)
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, cosine_warmup
+
+from .shapes import ShapeSpec
+
+__all__ = ["abstract_params", "extra_specs", "make_train_step",
+           "make_prefill_step", "make_decode_step", "build_cell"]
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(params_shape):
+    return jax.eval_shape(adamw_init, params_shape)
+
+
+def extra_specs(cfg: ModelConfig, batch: int) -> dict[str, jax.ShapeDtypeStruct]:
+    """Stubbed modality-frontend inputs (precomputed embeddings)."""
+    if cfg.family == "vlm":
+        return {
+            "vision": jax.ShapeDtypeStruct(
+                (batch, cfg.vision_tokens, cfg.vision_dim), jnp.float32
+            )
+        }
+    if cfg.family == "encdec":
+        return {
+            "frames": jax.ShapeDtypeStruct(
+                (batch, cfg.enc_frames, cfg.d_model), jnp.float32
+            )
+        }
+    return {}
+
+
+def _extra_shardings(mesh, cfg, batch):
+    dp = dp_axes(mesh)
+    import numpy as np
+
+    ok = batch % int(np.prod([mesh.shape[a] for a in dp])) == 0
+    spec = P(dp if ok else None, None, None)
+    return {k: NamedSharding(mesh, spec) for k in extra_specs(cfg, batch)}
+
+
+def make_train_step(cfg: ModelConfig, flags: RuntimeFlags, *,
+                    lr: float = 3e-4, warmup: int = 100, total: int = 10000,
+                    clip_norm: float = 1.0):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            extra = {k: v for k, v in batch.items() if k not in ("tokens", "labels")}
+            loss, metrics = train_forward(
+                p, batch["tokens"], batch["labels"], cfg, flags, extra
+            )
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        step_lr = cosine_warmup(opt_state["step"], lr, warmup, total)
+        params, opt_state = adamw_update(params, grads, opt_state, step_lr)
+        out = dict(metrics)
+        out.update({"loss": loss, "grad_norm": gnorm, "lr": step_lr})
+        return params, opt_state, out
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, flags: RuntimeFlags, pad_to: int | None = None):
+    def prefill_step(params, batch):
+        extra = {k: v for k, v in batch.items() if k != "tokens"}
+        return prefill(params, batch["tokens"], cfg, flags, extra, pad_to=pad_to)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, flags: RuntimeFlags):
+    def serve_step(params, token, cache):
+        return decode_step(params, token, cache, cfg, flags)
+
+    return serve_step
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, flags: RuntimeFlags):
+    """Returns (fn, args, in_shardings, out_shardings_hint) for one cell."""
+    p_shape = abstract_params(cfg)
+    p_shard = param_shardings(mesh, p_shape)
+    b, s = shape.global_batch, shape.seq_len
+    tok_shard = batch_sharding(mesh, b)
+
+    if shape.kind == "train":
+        o_shape = abstract_opt_state(p_shape)
+        o_shard = param_shardings(mesh, o_shape)
+        # step counter is a scalar — replicate
+        o_shard["step"] = NamedSharding(mesh, P())
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            **extra_specs(cfg, b),
+        }
+        b_shard: dict[str, Any] = {
+            "tokens": tok_shard, "labels": tok_shard,
+            **_extra_shardings(mesh, cfg, b),
+        }
+        fn = make_train_step(cfg, flags)
+        return fn, (p_shape, o_shape, batch), (p_shard, o_shard, b_shard), (
+            p_shard, o_shard, None
+        )
+
+    if shape.kind == "prefill":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            **extra_specs(cfg, b),
+        }
+        b_shard = {"tokens": tok_shard, **_extra_shardings(mesh, cfg, b)}
+        fn = make_prefill_step(cfg, flags, pad_to=s)
+        return fn, (p_shape, batch), (p_shard, b_shard), None
+
+    # decode: one new token against a seq_len-deep cache
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    c_shard = cache_shardings(mesh, cfg, cache, b)
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    t_shard = batch_sharding(mesh, b)
+    fn = make_decode_step(cfg, flags)
+    return fn, (p_shape, token, cache), (p_shard, t_shard, c_shard), None

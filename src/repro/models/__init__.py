@@ -1,0 +1,10 @@
+"""Model zoo: composable JAX model definitions for the 10 assigned archs."""
+
+from .layers import RuntimeFlags  # noqa: F401
+from .model import (  # noqa: F401
+    decode_step,
+    init_cache,
+    init_params,
+    prefill,
+    train_forward,
+)

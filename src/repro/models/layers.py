@@ -1,0 +1,285 @@
+"""Shared neural building blocks (pure-JAX, pytree params, init/apply pairs).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init functions take a PRNG key
+    and return the pytree; apply functions are pure;
+  * compute dtype comes from the config (bf16 on TPU); params are stored in
+    f32 and cast at use ("master weights" live in the optimizer state);
+  * layers are written to be stacked with `jax.lax.scan` over a leading
+    layer axis (homogeneous stacks compile to compact HLO — essential for
+    the 512-device dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import gqa_attention
+
+__all__ = [
+    "RuntimeFlags",
+    "rms_norm",
+    "layer_norm",
+    "init_linear",
+    "linear",
+    "init_embedding",
+    "rope",
+    "init_attention",
+    "attention",
+    "attention_decode",
+    "init_mlp",
+    "mlp",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeFlags:
+    """Execution-path switches threaded through every model."""
+
+    use_pallas: bool = False      # pallas kernels (TPU prod / interpret tests)
+    interpret: bool = True        # pallas interpret mode (CPU validation)
+    remat: bool = True            # activation checkpointing per layer
+    attn_block_q: int = 512       # flash attention tiles
+    # 4096 is the measured memory-term balance for the 32k prefill cells
+    # (bigger blocks = fewer online-softmax carry round-trips; EXPERIMENTS
+    # §Perf starcoder2 iteration); the Pallas kernel uses its own VMEM tile
+    attn_block_k: int = 4096
+    # medium-granularity scan chunk; 512 is the measured roofline balance
+    # point on the train_4k cells (EXPERIMENTS.md §Perf, zamba2 iteration)
+    ssm_chunk: int = 512
+    # distribution: set by the launchers.  GSPMD does NOT propagate the
+    # model axis through scan-over-layers reliably (measured 16x redundant
+    # compute without these) — so blocks place explicit constraints.
+    mesh: object = None           # jax.sharding.Mesh | None
+    dp: tuple = ("data",)         # data-parallel axis names ('pod','data')
+
+
+def shard(x: jnp.ndarray, flags: "RuntimeFlags", *spec) -> jnp.ndarray:
+    """with_sharding_constraint when a mesh is configured; no-op otherwise.
+
+    `spec` entries: "dp" expands to flags.dp; None / "model" pass through.
+    """
+    if flags.mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    expanded = tuple(flags.dp if s == "dp" else s for s in spec)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(flags.mesh, P(*expanded))
+    )
+
+
+def _cast(p, dtype):
+    return jax.tree.map(lambda a: a.astype(dtype) if a.dtype == jnp.float32 else a, p)
+
+
+# ---------------------------------------------------------------- norms
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * gamma + beta).astype(dt)
+
+
+# ---------------------------------------------------------------- linear
+def init_linear(key, d_in: int, d_out: int, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+
+
+def linear(p, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["w"].astype(x.dtype)
+
+
+def init_embedding(key, vocab: int, d: int):
+    return {"emb": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+# ---------------------------------------------------------------- rope
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: [B, L, H, D]; positions: [B, L] int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, L, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def rope_folded(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding on FOLDED [B*H, L, D] tensors; positions [B*H, L].
+
+    Head-structured elementwise math on [B, L, H, D] replicates whenever H
+    doesn't divide the model axis (GSPMD 'involuntary full
+    rematerialization', measured as 15 GB all-gathers per layer on
+    arctic-480b) — in merged-BH space the sharding is always even.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [Z, L, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+def init_attention(key, cfg) -> dict:
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.hd
+    return {
+        "wq": init_linear(ks[0], d, cfg.n_heads * hd),
+        "wk": init_linear(ks[1], d, cfg.n_kv_heads * hd),
+        "wv": init_linear(ks[2], d, cfg.n_kv_heads * hd),
+        "wo": init_linear(ks[3], cfg.n_heads * hd, d, scale=(cfg.n_heads * hd) ** -0.5),
+    }
+
+
+def _split_heads(x, n_heads, hd):
+    b, l, _ = x.shape
+    return x.reshape(b, l, n_heads, hd)
+
+
+def attention(
+    p,
+    x: jnp.ndarray,              # [B, L, d]
+    cfg,
+    flags: RuntimeFlags,
+    positions: jnp.ndarray | None = None,
+    kv_x: jnp.ndarray | None = None,   # cross-attention source (encoder/vision)
+    causal: bool = True,
+    use_rope: bool = True,
+) -> tuple[jnp.ndarray, dict]:
+    """Full-sequence attention (train / prefill).  Returns (out, kv_cache).
+
+    All head-structured math runs in FOLDED [B*H, L, D] space, which shards
+    evenly for any head count (DESIGN.md §Perf): fold immediately after the
+    projections, RoPE on folded tensors, GQA broadcast in the merged dim,
+    unfold only for the output projection and the returned KV cache.
+    """
+    from repro.kernels.flash_attention.ops import (
+        constrain_folded,
+        gqa_attention_folded,
+    )
+
+    b, l, _ = x.shape
+    hd, hq, hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    src = x if kv_x is None else kv_x
+    lk = src.shape[1]
+    fold = lambda t, h, ln: (
+        t.reshape(b, ln, h, hd).transpose(0, 2, 1, 3).reshape(b * h, ln, hd)
+    )
+    qf = constrain_folded(fold(linear(p["wq"], x), hq, l), flags, b * hq)
+    kf = constrain_folded(fold(linear(p["wk"], src), hkv, lk), flags,
+                          b * hkv, is_kv=True)
+    vf = constrain_folded(fold(linear(p["wv"], src), hkv, lk), flags,
+                          b * hkv, is_kv=True)
+    if use_rope and kv_x is None:
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(l)[None, :], (b, l))
+        posf = lambda h: jnp.broadcast_to(
+            positions[:, None, :], (b, h, l)
+        ).reshape(b * h, l)
+        qf = rope_folded(qf, posf(hq), cfg.rope_theta)
+        kf = rope_folded(kf, posf(hkv), cfg.rope_theta)
+    of = gqa_attention_folded(
+        qf, kf, vf, batch=b,
+        causal=causal and kv_x is None,
+        use_pallas=flags.use_pallas,
+        interpret=flags.interpret,
+        block_q=flags.attn_block_q,
+        block_k=flags.attn_block_k,
+        flags=flags,
+    )
+    of = constrain_folded(of, flags, b * hq)
+    o3 = of.reshape(b, hq, l, hd).transpose(0, 2, 1, 3).reshape(b, l, hq * hd)
+    o3 = shard(o3, flags, "dp", None, "model")
+    out = linear(p["wo"], o3)
+    out = shard(out, flags, "dp", None, None)
+    # unfold the (roped) kv for the decode cache
+    k4 = kf.reshape(b, hkv, lk, hd).transpose(0, 2, 1, 3)
+    v4 = vf.reshape(b, hkv, lk, hd).transpose(0, 2, 1, 3)
+    return out, {"k": k4, "v": v4}
+
+
+def attention_decode(
+    p,
+    x: jnp.ndarray,        # [B, 1, d]
+    cache: dict,           # {"k","v": [B, S, Hkv, D]}
+    pos: jnp.ndarray,      # [] int32 — current position
+    cfg,
+    update_cache: bool = True,
+) -> tuple[jnp.ndarray, dict]:
+    """Single-token decode against a pre-allocated KV cache."""
+    b = x.shape[0]
+    hd = cfg.hd
+    q = _split_heads(linear(p["wq"], x), cfg.n_heads, hd)
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    if update_cache:
+        k_new = _split_heads(linear(p["wk"], x), cfg.n_kv_heads, hd)
+        v_new = _split_heads(linear(p["wv"], x), cfg.n_kv_heads, hd)
+        k_new = rope(k_new, positions, cfg.rope_theta)
+        q = rope(q, positions, cfg.rope_theta)
+        cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, axis=1),
+        }
+    k, v = cache["k"], cache["v"]
+    s_len = k.shape[1]
+    group = cfg.n_heads // cfg.n_kv_heads
+    kq = jnp.repeat(k, group, axis=2)
+    vq = jnp.repeat(v, group, axis=2)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                        kq.astype(jnp.float32))
+    valid = jnp.arange(s_len)[None, None, None, :] <= pos
+    logits = jnp.where(valid, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, vq.astype(jnp.float32)).astype(x.dtype)
+    out = linear(p["wo"], o.reshape(b, 1, cfg.n_heads * hd))
+    return out, cache
+
+
+# ---------------------------------------------------------------- mlp
+def init_mlp(key, cfg) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp == "swiglu":
+        return {
+            "w1": init_linear(ks[0], d, ff),
+            "w3": init_linear(ks[1], d, ff),
+            "w2": init_linear(ks[2], ff, d, scale=ff ** -0.5),
+        }
+    return {
+        "w1": init_linear(ks[0], d, ff),
+        "w2": init_linear(ks[2], ff, d, scale=ff ** -0.5),
+    }
+
+
+def mlp(p, x: jnp.ndarray, kind: str, flags: RuntimeFlags | None = None) -> jnp.ndarray:
+    fl = flags or RuntimeFlags(mesh=None)
+    if kind == "swiglu":
+        h = jax.nn.silu(linear(p["w1"], x)) * linear(p["w3"], x)
+    else:
+        h = jax.nn.gelu(linear(p["w1"], x))
+    h = shard(h, fl, "dp", None, "model")
+    out = linear(p["w2"], h)
+    return shard(out, fl, "dp", None, None)

@@ -1,0 +1,118 @@
+"""Mamba2 (SSD) block — executed with the medium-granularity chunked scan.
+
+The SSD recurrence h_t = exp(a_t) h_{t-1} + b_t x_t is a unit-bidiagonal
+SpTRSV (DESIGN.md §1); the chunked execution in `repro.kernels.ssd_scan`
+is the paper's dataflow: chunk = coarse allocation, intra-chunk matmuls =
+fine edge computation, carried chunk state = psum feedback.
+
+Structure per block (simplified faithful Mamba2):
+  in_proj -> [z (gate), xBC, dt]; depthwise causal conv on xBC; split into
+  x (per-head values), B (input proj of state), C (output proj); per-head
+  scalar decay a = -softplus(dt + bias) * A; y = SSD(x, B, C, a); gated
+  RMSNorm; out_proj.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ops import linear_recurrence
+
+from .layers import RuntimeFlags, init_linear, linear, rms_norm, shard
+
+__all__ = ["init_mamba2", "mamba2_block", "mamba2_decode", "init_mamba2_state"]
+
+
+def _dims(cfg):
+    d_inner = 2 * cfg.d_model
+    nh = cfg.ssm_heads
+    hd = d_inner // nh             # value head dim
+    ds = cfg.ssm_state             # state width per head (key dim)
+    return d_inner, nh, hd, ds
+
+
+def init_mamba2(key, cfg) -> dict:
+    d = cfg.d_model
+    d_inner, nh, hd, ds = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    conv_ch = d_inner + 2 * nh * ds
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * d_inner + 2 * nh * ds + nh),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), jnp.float32) * 0.2,
+        "a_log": jnp.zeros((nh,), jnp.float32),       # log A (per head)
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_g": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": init_linear(ks[2], d_inner, d, scale=d_inner ** -0.5),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: [B, L, C]; w: [K, C]."""
+    kw = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (kw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+        for i in range(kw)
+    )
+    return jax.nn.silu(out), xp[:, -(kw - 1):, :] if kw > 1 else None
+
+
+def _split(p, cfg, u):
+    d_inner, nh, hd, ds = _dims(cfg)
+    zxbcdt = linear(p["in_proj"], u)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : 2 * d_inner + 2 * nh * ds]
+    dt = zxbcdt[..., -nh:]
+    return z, xbc, dt
+
+
+def mamba2_block(
+    p, u: jnp.ndarray, cfg, flags: RuntimeFlags,
+    conv_state=None, ssm_state=None,
+) -> tuple[jnp.ndarray, tuple]:
+    """u: [B, L, d] -> (out [B, L, d], (conv_state, ssm_state))."""
+    b, l, _ = u.shape
+    d_inner, nh, hd, ds = _dims(cfg)
+    z, xbc, dt = _split(p, cfg, u)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], conv_state)
+    x = xbc[..., :d_inner].reshape(b, l, nh, hd)
+    bmat = xbc[..., d_inner : d_inner + nh * ds].reshape(b, l, nh, ds)
+    cmat = xbc[..., d_inner + nh * ds :].reshape(b, l, nh, ds)
+    # head sharding happens on the merged B*H dim inside linear_recurrence
+    # (zamba2's 40 heads don't divide a 16-way model axis; B*H always does)
+
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # [B,L,nh]
+    a = -jnp.exp(p["a_log"])[None, None, :] * dt_s                     # log-decay
+    w = jnp.broadcast_to(a[..., None], (b, l, nh, ds))                 # per-key
+
+    # discretized input: x_bar = dt * x ; recurrence S += (B dt x)
+    k_in = bmat
+    v_in = x * dt_s[..., None].astype(x.dtype)
+    y, ssm_state = linear_recurrence(
+        cmat, k_in, v_in, w, s0=ssm_state,
+        chunk=flags.ssm_chunk, inclusive=True,
+        use_pallas=flags.use_pallas, interpret=flags.interpret, flags=flags,
+    )
+    y = y + x * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, l, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_g"], cfg.norm_eps)
+    return linear(p["out_proj"], y), (conv_state, ssm_state)
+
+
+def init_mamba2_state(cfg, batch: int, dtype=jnp.float32):
+    d_inner, nh, hd, ds = _dims(cfg)
+    conv_ch = d_inner + 2 * nh * ds
+    return (
+        jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        jnp.zeros((batch, nh, ds, hd), jnp.float32),
+    )
+
+
+def mamba2_decode(p, u, cfg, flags, conv_state, ssm_state):
+    """Single-step decode: u [B, 1, d]; O(1) state update."""
+    return mamba2_block(p, u, cfg, flags, conv_state, ssm_state)

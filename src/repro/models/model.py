@@ -1,0 +1,496 @@
+"""Model zoo assembly: init / train_forward / prefill / decode_step per family.
+
+Families: dense, moe, vlm, encdec (transformer machinery) and ssm, hybrid
+(recurrent machinery on the medium-granularity chunked scan).
+
+All stacks use `lax.scan` over layer-stacked parameter pytrees so the HLO
+stays compact for the 512-device dry-run; per-layer activation
+checkpointing (`flags.remat`) keeps training memory at O(sqrt-ish).
+
+Modality frontends are STUBS per the assignment: `encdec` consumes
+precomputed frame embeddings, `vlm` consumes precomputed patch embeddings
+(see launch/dryrun.py `input_specs`).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import mamba2 as m2
+from . import rwkv6 as rw
+from .layers import (
+    RuntimeFlags,
+    attention,
+    attention_decode,
+    init_attention,
+    init_embedding,
+    init_linear,
+    init_mlp,
+    linear,
+    mlp,
+    rms_norm,
+    shard,
+)
+from .moe import init_moe, moe_ffn
+
+__all__ = ["init_params", "train_forward", "prefill", "decode_step",
+           "init_cache", "RuntimeFlags"]
+
+
+def _dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def _stack_init(fn, key, n: int):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+# =====================================================================
+# init
+# =====================================================================
+def _init_dense_layer(cfg):
+    def go(key):
+        ka, km = jax.random.split(key)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": init_attention(ka, cfg),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "mlp": init_mlp(km, cfg),
+        }
+
+    return go
+
+
+def _init_moe_layer(cfg):
+    def go(key):
+        ka, km, kd = jax.random.split(key, 3)
+        p = {
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": init_attention(ka, cfg),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "moe": init_moe(km, cfg),
+        }
+        if cfg.moe_dense_residual:
+            p["dense_mlp"] = init_mlp(kd, cfg)
+        return p
+
+    return go
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    kemb, klay, kout, kx1, kx2 = jax.random.split(key, 5)
+    params: dict[str, Any] = {
+        "emb": init_embedding(kemb, cfg.vocab, cfg.d_model),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_linear(kout, cfg.d_model, cfg.vocab, scale=0.02)
+
+    if cfg.family == "dense":
+        params["layers"] = _stack_init(_init_dense_layer(cfg), klay, cfg.n_layers)
+    elif cfg.family == "moe":
+        params["layers"] = _stack_init(_init_moe_layer(cfg), klay, cfg.n_layers)
+    elif cfg.family == "vlm":
+        g = cfg.cross_attn_every
+        ng, per = cfg.n_layers // g, g - 1
+        def grp(key):
+            k1, k2 = jax.random.split(key)
+            return {
+                "self": _stack_init(_init_dense_layer(cfg), k1, per),
+                "cross": _init_dense_layer(cfg)(k2),
+            }
+        params["groups"] = _stack_init(grp, klay, ng)
+        params["vis_proj"] = init_linear(kx1, cfg.vision_dim, cfg.d_model)
+    elif cfg.family == "encdec":
+        def dec_layer(key):
+            k1, k2, k3 = jax.random.split(key, 3)
+            p = _init_dense_layer(cfg)(k1)
+            p["ln_x"] = jnp.ones((cfg.d_model,), jnp.float32)
+            p["cross"] = init_attention(k2, cfg)
+            return p
+        params["enc_layers"] = _stack_init(_init_dense_layer(cfg), kx1, cfg.enc_layers)
+        params["enc_ln_f"] = jnp.ones((cfg.d_model,), jnp.float32)
+        params["layers"] = _stack_init(dec_layer, klay, cfg.n_layers)
+    elif cfg.family == "ssm":
+        def rwkv_layer(key):
+            k1, k2 = jax.random.split(key)
+            return {
+                "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+                "time": rw.init_rwkv_time_mix(k1, cfg),
+                "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+                "chan": rw.init_rwkv_channel_mix(k2, cfg),
+            }
+        params["layers"] = _stack_init(rwkv_layer, klay, cfg.n_layers)
+    elif cfg.family == "hybrid":
+        g = cfg.hybrid_attn_every
+        ng, per = cfg.n_layers // g, g
+        def mamba_layer(key):
+            return {
+                "ln": jnp.ones((cfg.d_model,), jnp.float32),
+                "mamba": m2.init_mamba2(key, cfg),
+            }
+        def grp(key):
+            k1 = key
+            return {"mamba": _stack_init(mamba_layer, k1, per)}
+        params["groups"] = _stack_init(grp, klay, ng)
+        params["shared"] = _init_dense_layer(cfg)(kx2)  # ONE shared block
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# =====================================================================
+# forward blocks
+# =====================================================================
+def _dense_block(lp, x, cfg, flags, positions=None, kv_x=None, causal=True,
+                 use_rope=True):
+    h, kv = attention(
+        lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg, flags,
+        positions=positions, kv_x=kv_x, causal=causal, use_rope=use_rope,
+    )
+    x = x + h
+    x = x + mlp(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps), cfg.mlp, flags)
+    return x, kv
+
+
+def _moe_block(lp, x, cfg, flags):
+    h, kv = attention(lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg, flags)
+    x = x + h
+    z = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    mo, aux = moe_ffn(lp["moe"], z, cfg, flags)
+    if cfg.moe_dense_residual:
+        mo = mo + mlp(lp["dense_mlp"], z, cfg.mlp, flags)
+    return x + mo, kv, aux
+
+
+def _maybe_remat(fn, flags):
+    return jax.checkpoint(fn) if flags.remat else fn
+
+
+def _backbone(params, x, cfg, flags: RuntimeFlags, collect_cache=False):
+    """Run the family backbone over a full sequence.
+
+    Returns (hidden, cache_pytree, aux_loss).
+    """
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense",):
+        def blk(x, lp):
+            y, kv = _dense_block(lp, x, cfg, flags)
+            return y, (kv if collect_cache else None)
+        x, caches = jax.lax.scan(_maybe_remat(blk, flags), x, params["layers"])
+        return x, {"kv": caches}, aux_total
+
+    if cfg.family == "moe":
+        def blk(x, lp):
+            y, kv, aux = _moe_block(lp, x, cfg, flags)
+            return y, ((kv if collect_cache else None), aux)
+        x, (caches, auxes) = jax.lax.scan(_maybe_remat(blk, flags), x, params["layers"])
+        return x, {"kv": caches}, aux_total + auxes.mean()
+
+    if cfg.family == "vlm":
+        vis = params["_vis_embed"]  # injected by caller
+        def grp(x, gp):
+            def blk(x, lp):
+                y, kv = _dense_block(lp, x, cfg, flags)
+                return y, (kv if collect_cache else None)
+            x, self_kv = jax.lax.scan(blk, x, gp["self"])
+            y, cross_kv = _dense_block(
+                gp["cross"], x, cfg, flags, kv_x=vis, causal=False, use_rope=False
+            )
+            return y, (self_kv, (cross_kv if collect_cache else None))
+        x, (self_caches, cross_caches) = jax.lax.scan(
+            _maybe_remat(grp, flags), x, params["groups"]
+        )
+        return x, {"kv": self_caches, "cross_kv": cross_caches}, aux_total
+
+    if cfg.family == "encdec":
+        enc = params["_enc_out"]
+        def blk(x, lp):
+            h, kv = attention(
+                lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg, flags
+            )
+            x = x + h
+            h, _ = attention(
+                lp["cross"], rms_norm(x, lp["ln_x"], cfg.norm_eps), cfg, flags,
+                kv_x=enc, causal=False, use_rope=False,
+            )
+            x = x + h
+            x = x + mlp(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps), cfg.mlp, flags)
+            return x, (kv if collect_cache else None)
+        x, caches = jax.lax.scan(_maybe_remat(blk, flags), x, params["layers"])
+        return x, {"kv": caches}, aux_total
+
+    if cfg.family == "ssm":
+        def blk(x, lp):
+            h, (tshift, wkv) = rw.rwkv_time_mix(
+                lp["time"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg, flags
+            )
+            x = x + h
+            h, cshift = rw.rwkv_channel_mix(
+                lp["chan"], rms_norm(x, lp["ln2"], cfg.norm_eps)
+            )
+            x = x + h
+            st = (tshift, wkv, cshift) if collect_cache else None
+            return x, st
+        x, states = jax.lax.scan(_maybe_remat(blk, flags), x, params["layers"])
+        return x, {"state": states}, aux_total
+
+    if cfg.family == "hybrid":
+        shared = params["shared"]
+        def grp(x, gp):
+            def blk(x, lp):
+                h, (cst, sst) = m2.mamba2_block(
+                    lp["mamba"], rms_norm(x, lp["ln"], cfg.norm_eps), cfg, flags
+                )
+                return x + h, ((cst, sst) if collect_cache else None)
+            x, states = jax.lax.scan(blk, x, gp["mamba"])
+            y, kv = _dense_block(shared, x, cfg, flags)
+            return y, (states, (kv if collect_cache else None))
+        x, (states, kv) = jax.lax.scan(_maybe_remat(grp, flags), x, params["groups"])
+        return x, {"state": states, "kv": kv}, aux_total
+
+    raise ValueError(cfg.family)
+
+
+def _embed(params, tokens, cfg):
+    x = params["emb"]["emb"][tokens].astype(_dtype(cfg))
+    return x
+
+
+def _unembed(params, x, cfg, flags=None):
+    fl = flags or RuntimeFlags()
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["emb"]["emb"].T.astype(x.dtype)
+    else:
+        logits = linear(params["lm_head"], x)
+    # vocab-sharded logits: the softmax/logsumexp reduces locally then
+    # all-reduces a [B, S] scalar field instead of materializing [B, S, V]
+    logits = shard(logits, fl, "dp", None, "model")
+    return logits.astype(jnp.float32)
+
+
+def _run_frontends(params, cfg, flags, extra, batch):
+    """Inject stubbed modality embeddings into the param pytree (as consts)."""
+    params = dict(params)
+    if cfg.family == "vlm":
+        vis = extra["vision"].astype(_dtype(cfg))
+        params["_vis_embed"] = linear(params["vis_proj"], vis)
+    if cfg.family == "encdec":
+        frames = extra["frames"].astype(_dtype(cfg))
+        def eblk(x, lp):
+            y, _ = _dense_block(lp, x, cfg, flags, causal=False, use_rope=True)
+            return y, None
+        enc, _ = jax.lax.scan(eblk, frames, params["enc_layers"])
+        params["_enc_out"] = rms_norm(enc, params["enc_ln_f"], cfg.norm_eps)
+    return params
+
+
+# =====================================================================
+# public entry points
+# =====================================================================
+def train_forward(
+    params, tokens, labels, cfg: ModelConfig, flags: RuntimeFlags,
+    extra: dict | None = None,
+) -> tuple[jnp.ndarray, dict]:
+    """tokens/labels: [B, S] int32.  Returns (loss, metrics)."""
+    params = _run_frontends(params, cfg, flags, extra or {}, tokens.shape[0])
+    x = _embed(params, tokens, cfg)
+    x, _, aux = _backbone(params, x, cfg, flags, collect_cache=False)
+    logits = _unembed(params, x, cfg, flags)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold).mean()
+    loss = nll + 0.01 * aux
+    return loss, {"nll": nll, "aux": aux,
+                  "ppl": jnp.exp(jnp.clip(nll, a_max=20.0))}
+
+
+def prefill(
+    params, tokens, cfg: ModelConfig, flags: RuntimeFlags,
+    extra: dict | None = None, pad_to: int | None = None,
+):
+    """Full-sequence forward collecting decode state.  Returns (logits, cache).
+
+    For attention families the KV cache is padded to `pad_to` so decode can
+    append; recurrent families return O(1) states.
+    """
+    params = _run_frontends(params, cfg, flags, extra or {}, tokens.shape[0])
+    x = _embed(params, tokens, cfg)
+    x, cache, _ = _backbone(params, x, cfg, flags, collect_cache=True)
+    logits = _unembed(params, x[:, -1:], cfg, flags)
+
+    if pad_to is not None and "kv" in cache and cache["kv"] is not None:
+        seq = tokens.shape[1]
+        def pad_kv(kv):
+            pad = pad_to - seq
+            # kv: [..., B, S, H, D] (scan-stacked leading axes)
+            pads = [(0, 0)] * (kv.ndim - 3) + [(0, pad), (0, 0), (0, 0)]
+            return jnp.pad(kv, pads)
+        cache["kv"] = jax.tree.map(pad_kv, cache["kv"])
+    cache["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+    if cfg.family == "vlm":
+        cache["_vis_embed"] = params["_vis_embed"]
+    if cfg.family == "encdec":
+        cache["_enc_out"] = params["_enc_out"]
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    """Empty decode cache (for decode-from-scratch / dry-run serve_step)."""
+    dt = dtype or _dtype(cfg)
+    hd, hkv = cfg.hd, cfg.n_kv_heads
+    cache: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    kv = lambda n: {
+        "k": jnp.zeros((n, batch, max_seq, hkv, hd), dt),
+        "v": jnp.zeros((n, batch, max_seq, hkv, hd), dt),
+    }
+    if cfg.family in ("dense", "moe", "encdec"):
+        cache["kv"] = kv(cfg.n_layers)
+    if cfg.family == "encdec":
+        cache["_enc_out"] = jnp.zeros((batch, cfg.enc_frames, cfg.d_model), dt)
+    if cfg.family == "vlm":
+        ng, per = cfg.n_layers // cfg.cross_attn_every, cfg.cross_attn_every - 1
+        cache["kv"] = jax.tree.map(
+            lambda a: a.reshape(ng, per, *a.shape[1:]), kv(ng * per)
+        )
+        cache["cross_kv"] = {
+            "k": jnp.zeros((ng, batch, cfg.vision_tokens, hkv, hd), dt),
+            "v": jnp.zeros((ng, batch, cfg.vision_tokens, hkv, hd), dt),
+        }
+    if cfg.family == "ssm":
+        t, w, c = rw.init_rwkv_state(cfg, batch, dt)
+        st = lambda a: jnp.broadcast_to(a[None], (cfg.n_layers, *a.shape))
+        cache["state"] = (st(t), st(w), st(c))
+    if cfg.family == "hybrid":
+        ng, per = cfg.n_layers // cfg.hybrid_attn_every, cfg.hybrid_attn_every
+        cst, sst = m2.init_mamba2_state(cfg, batch, dt)
+        st = lambda a: jnp.broadcast_to(a[None, None], (ng, per, *a.shape))
+        cache["state"] = (st(cst), st(sst))
+        cache["kv"] = jax.tree.map(
+            lambda a: a.reshape(ng, *a.shape[1:]), kv(ng)
+        )
+    return cache
+
+
+def decode_step(
+    params, token, cache, cfg: ModelConfig, flags: RuntimeFlags,
+):
+    """One-token decode. token: [B, 1] int32. Returns (logits, new_cache)."""
+    pos = cache["pos"]
+    x = _embed(params, token, cfg)
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "moe"):
+        def blk(x, lp_kv):
+            lp, kv = lp_kv
+            h, kv = attention_decode(
+                lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), kv, pos, cfg
+            )
+            x = x + h
+            if cfg.family == "moe":
+                z = rms_norm(x, lp["ln2"], cfg.norm_eps)
+                mo, _ = moe_ffn(lp["moe"], z, cfg, flags, dropless=True)
+                if cfg.moe_dense_residual:
+                    mo = mo + mlp(lp["dense_mlp"], z, cfg.mlp, flags)
+                x = x + mo
+            else:
+                x = x + mlp(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps), cfg.mlp, flags)
+            return x, kv
+        x, kv = jax.lax.scan(blk, x, (params["layers"], cache["kv"]))
+        new_cache["kv"] = kv
+
+    elif cfg.family == "vlm":
+        vis_kv = cache["cross_kv"]
+        def grp(x, gkv):
+            gp, kv, ckv = gkv
+            def blk(x, lp_kv):
+                lp, kv = lp_kv
+                h, kv = attention_decode(
+                    lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), kv, pos, cfg
+                )
+                x = x + h
+                x = x + mlp(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps), cfg.mlp, flags)
+                return x, kv
+            x, kv = jax.lax.scan(blk, x, (gp["self"], kv))
+            lp = gp["cross"]
+            h, _ = attention_decode(
+                lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), ckv,
+                jnp.asarray(cfg.vision_tokens - 1, jnp.int32), cfg,
+                update_cache=False,
+            )
+            x = x + h
+            x = x + mlp(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps), cfg.mlp, flags)
+            return x, kv
+        x, kv = jax.lax.scan(grp, x, (params["groups"], cache["kv"], vis_kv))
+        new_cache["kv"] = kv
+
+    elif cfg.family == "encdec":
+        enc = cache["_enc_out"]
+        def blk(x, lp_kv):
+            lp, kv = lp_kv
+            h, kv = attention_decode(
+                lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), kv, pos, cfg
+            )
+            x = x + h
+            h, _ = attention(
+                lp["cross"], rms_norm(x, lp["ln_x"], cfg.norm_eps), cfg, flags,
+                kv_x=enc, causal=False, use_rope=False,
+            )
+            x = x + h
+            x = x + mlp(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps), cfg.mlp, flags)
+            return x, kv
+        x, kv = jax.lax.scan(blk, x, (params["layers"], cache["kv"]))
+        new_cache["kv"] = kv
+
+    elif cfg.family == "ssm":
+        def blk(x, lp_st):
+            lp, (tsh, wkv, csh) = lp_st
+            h, (tsh, wkv) = rw.rwkv_time_mix(
+                lp["time"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg, flags,
+                shift_state=tsh, wkv_state=wkv,
+            )
+            x = x + h
+            h, csh = rw.rwkv_channel_mix(
+                lp["chan"], rms_norm(x, lp["ln2"], cfg.norm_eps), shift_state=csh
+            )
+            return x + h, (tsh, wkv, csh)
+        x, state = jax.lax.scan(blk, x, (params["layers"], cache["state"]))
+        new_cache["state"] = state
+
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+        def grp(x, gp_st):
+            gp, (cst, sst), kv = gp_st
+            def blk(x, lp_st):
+                lp, (c1, s1) = lp_st
+                h, (c1, s1) = m2.mamba2_decode(
+                    lp["mamba"], rms_norm(x, lp["ln"], cfg.norm_eps), cfg, flags,
+                    c1, s1,
+                )
+                return x + h, (c1, s1)
+            x, st = jax.lax.scan(blk, x, (gp["mamba"], (cst, sst)))
+            h, kv = attention_decode(
+                shared["attn"], rms_norm(x, shared["ln1"], cfg.norm_eps), kv, pos, cfg
+            )
+            x = x + h
+            x = x + mlp(shared["mlp"], rms_norm(x, shared["ln2"], cfg.norm_eps), cfg.mlp, flags)
+            return x, (st, kv)
+        x, (state, kv) = jax.lax.scan(
+            grp, x, (params["groups"], cache["state"], cache["kv"])
+        )
+        new_cache["state"] = state
+        new_cache["kv"] = kv
+    else:
+        raise ValueError(cfg.family)
+
+    new_cache["pos"] = pos + 1
+    logits = _unembed(params, x, cfg, flags)
+    return logits, new_cache

@@ -1,0 +1,167 @@
+"""Mixture-of-Experts FFN with dp-grouped scatter dispatch (EP-shardable).
+
+Communication-aware formulation (see EXPERIMENTS.md §Perf, arctic-480b):
+tokens are processed in DP groups [G, Tg, d] where G = the data-parallel
+world size, so
+
+  * routing, ranking (grouped cumsum) and the dispatch scatter stay LOCAL
+    to each data shard — no cross-device movement of activations on the
+    dispatch side (a global gather `xt[pairs]` measured 30 GB all-gathers
+    per layer on arctic-480b: GSPMD replicates arbitrary gathers over a
+    sharded dim);
+  * expert buffers [G, E, C, d] are sharded (data, model): the expert GEMMs
+    contract against model-sharded expert weights with ZERO weight
+    movement;
+  * the combine all-gathers the (bf16) expert outputs over the model axis
+    once, after which the per-token gather is again local.
+
+Capacity is per (group, expert): C = Tg*k/E * capacity_factor, standard
+GShard grouped-drop semantics.  `dropless=True` (decode) sets C = Tg*k.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .layers import RuntimeFlags, init_linear, linear, shard
+
+__all__ = ["init_moe", "moe_ffn"]
+
+
+def init_moe(key, cfg) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    ks = jax.random.split(key, 4)
+    n_in = 3 if cfg.mlp == "swiglu" else 2
+    p = {
+        "router": init_linear(ks[0], d, e, scale=0.02),
+        "w1": jax.random.normal(ks[1], (e, d, ff), jnp.float32) * d ** -0.5,
+        "w2": jax.random.normal(ks[2], (e, ff, d), jnp.float32) * ff ** -0.5,
+    }
+    if n_in == 3:
+        p["w3"] = jax.random.normal(ks[3], (e, d, ff), jnp.float32) * d ** -0.5
+    return p
+
+
+def _dp_groups(flags: RuntimeFlags, t: int) -> int:
+    if flags.mesh is None:
+        return 1
+    g = int(np.prod([flags.mesh.shape[a] for a in flags.dp]))
+    return g if t % g == 0 else 1
+
+
+def moe_ffn(p, x: jnp.ndarray, cfg, flags: RuntimeFlags | None = None,
+            dropless: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_topk
+    t = b * s
+    fl = flags or RuntimeFlags()
+    g = _dp_groups(fl, t)
+    tg = t // g
+
+    xt = shard(x.reshape(g, tg, d), fl, "dp", None, None)
+    logits = linear(p["router"], xt).astype(jnp.float32)       # [G, Tg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                     # [G, Tg, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros(e, jnp.float32).at[top_e.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+
+    cap = tg * k if dropless else int(max(1, tg * k / e * cfg.capacity_factor))
+
+    eid = top_e.reshape(g, tg * k)                             # k-minor pairs
+    wts = top_p.reshape(g, tg * k)
+    onehot = jax.nn.one_hot(eid, e, dtype=jnp.int32)           # [G, Tg*k, E]
+    rank = jnp.cumsum(onehot, axis=1) - onehot                 # grouped rank
+    slot = jnp.take_along_axis(rank, eid[..., None], axis=-1)[..., 0]
+    keep = slot < cap
+    slot_t = jnp.where(keep, slot, cap)                        # cap == trash
+    xrep = jnp.repeat(xt, k, axis=1)                           # [G, Tg*k, d]
+    xrep = jnp.where(keep[..., None], xrep, 0).astype(x.dtype)
+
+    w1 = p["w1"].astype(x.dtype)
+    w2 = p["w2"].astype(x.dtype)
+    w3 = p.get("w3")
+    w3 = w3.astype(x.dtype) if w3 is not None else None
+
+    if g > 1:
+        # EXPLICIT expert parallelism via shard_map: GSPMD cannot derive
+        # the MoE movement pattern from scatter/gather ops — every jnp-level
+        # formulation we measured replicated activations (30 GB+ all-gathers
+        # per layer on arctic-480b).  Device (i, j) owns dp-group i and the
+        # j-th expert slice: dispatch scatter and expert GEMMs are fully
+        # LOCAL; the only communication is one bf16 all-gather of expert
+        # outputs over the model axis (its transpose is a reduce-scatter).
+        out = _moe_shard_map(
+            fl, xrep, eid, slot_t, keep, wts, w1, w2, w3, cap, cfg.mlp, tg, k
+        )
+    else:
+        buf = jnp.zeros((e, cap + 1, d), x.dtype)
+        buf = buf.at[eid[0], slot_t[0]].add(xrep[0], mode="drop")
+        ye = _expert_ffn(buf, w1, w2, w3, cfg.mlp)
+        y = ye[eid[0], slot_t[0]].astype(jnp.float32) * wts[0][:, None]
+        y = jnp.where(keep[0][:, None], y, 0.0)
+        out = y.reshape(1, tg, k, d).sum(axis=2)
+
+    return out.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _expert_ffn(buf, w1, w2, w3, kind):
+    """buf: [E_local, C, d] -> [E_local, C, d]; plain batched GEMMs."""
+    h1 = jnp.einsum("ecd,edf->ecf", buf, w1)
+    if w3 is not None and kind == "swiglu":
+        h = jax.nn.silu(h1) * jnp.einsum("ecd,edf->ecf", buf, w3)
+    else:
+        h = jax.nn.gelu(h1)
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def _moe_shard_map(fl, xrep, eid, slot_t, keep, wts, w1, w2, w3, cap, kind,
+                   tg, k):
+    from jax.sharding import PartitionSpec as P
+
+    mesh = fl.mesh
+    dp = tuple(fl.dp)
+    d = xrep.shape[-1]
+    e = w1.shape[0]
+    e_loc = e // int(mesh.shape["model"])
+
+    def body(xrep_l, eid_l, slot_l, keep_l, wts_l, w1_l, w2_l, w3_l):
+        # shapes: xrep_l [1, Tg*k, d]; w*_l [e_loc, ...]
+        j = jax.lax.axis_index("model")
+        e0 = j * e_loc
+        mine = (eid_l[0] >= e0) & (eid_l[0] < e0 + e_loc) & keep_l[0]
+        el = jnp.where(mine, eid_l[0] - e0, 0)
+        sl = jnp.where(mine, slot_l[0], cap)
+        buf = jnp.zeros((e_loc, cap + 1, d), xrep_l.dtype)
+        buf = buf.at[el, sl].add(
+            jnp.where(mine[:, None], xrep_l[0], 0), mode="drop"
+        )
+        ye = _expert_ffn(buf, w1_l, w2_l, w3_l, kind)
+        ye_all = jax.lax.all_gather(ye, "model", axis=0, tiled=True)
+        y = ye_all[eid_l[0], slot_l[0]].astype(jnp.float32)
+        y = jnp.where(keep_l[0][:, None], y * wts_l[0][:, None], 0.0)
+        return y.reshape(1, tg, k, d).sum(axis=2)
+
+    args = [xrep, eid, slot_t, keep, wts, w1, w2]
+    specs = [P(dp, None, None), P(dp, None), P(dp, None), P(dp, None),
+             P(dp, None), P("model", None, None), P("model", None, None)]
+    if w3 is not None:
+        args.append(w3)
+        specs.append(P("model", None, None))
+    else:
+        args.append(jnp.zeros((e, 0, 0), xrep.dtype))
+        specs.append(P("model", None, None))
+
+    fn = jax.shard_map(
+        lambda *a: body(*a[:7], a[7] if w3 is not None else None),
+        mesh=mesh, in_specs=tuple(specs), out_specs=P(dp, None, None),
+        check_vma=False,
+    )
+    return fn(*args)

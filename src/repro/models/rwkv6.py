@@ -1,0 +1,113 @@
+"""RWKV6 "Finch" block — attention-free, data-dependent per-channel decay.
+
+The WKV recurrence S_t = diag(exp(w_t)) S_{t-1} + k_t v_t^T with exclusive
+output + u-bonus maps directly onto the medium-granularity chunked scan
+(`linear_recurrence(inclusive=False, u_bonus=u)`).
+
+Simplifications vs the released model (documented in DESIGN.md §5): the
+low-rank "LoRA" token-shift interpolators are replaced by single learned
+mixing coefficients per channel, and the decay LoRA by a direct projection
+— the dataflow (token shift -> r/k/v/w/g -> WKV -> gated groupnorm ->
+output) and all tensor shapes match.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ops import linear_recurrence
+
+from .layers import RuntimeFlags, init_linear, linear, rms_norm, shard
+
+__all__ = [
+    "init_rwkv_time_mix", "rwkv_time_mix",
+    "init_rwkv_channel_mix", "rwkv_channel_mix",
+    "init_rwkv_state",
+]
+
+
+def _dims(cfg):
+    nh, ds = cfg.ssm_heads, cfg.ssm_state
+    return nh, ds, nh * ds  # heads, key width, inner width (== d_model)
+
+
+def init_rwkv_time_mix(key, cfg) -> dict:
+    d = cfg.d_model
+    nh, ds, inner = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "mix": jnp.full((5, d), 0.5, jnp.float32),  # r,k,v,w,g token-shift mixes
+        "wr": init_linear(ks[0], d, inner),
+        "wk": init_linear(ks[1], d, inner),
+        "wv": init_linear(ks[2], d, inner),
+        "ww": init_linear(ks[3], d, inner, scale=1e-2),
+        "wg": init_linear(ks[4], d, inner),
+        "w_bias": jnp.full((inner,), -6.0, jnp.float32),
+        "u_bonus": jnp.zeros((nh, ds), jnp.float32),
+        "ln_g": jnp.ones((inner,), jnp.float32),
+        "wo": init_linear(ks[5], inner, d, scale=inner ** -0.5),
+    }
+
+
+def rwkv_time_mix(
+    p, x: jnp.ndarray, cfg, flags: RuntimeFlags,
+    shift_state=None, wkv_state=None,
+) -> tuple[jnp.ndarray, tuple]:
+    """x: [B, L, d] -> (out, (shift_state [B,1,d], wkv_state [B,H,K,V]))."""
+    b, l, d = x.shape
+    nh, ds, inner = _dims(cfg)
+    prev = (
+        jnp.zeros((b, 1, d), x.dtype) if shift_state is None
+        else shift_state.astype(x.dtype)
+    )
+    x_prev = jnp.concatenate([prev, x[:, :-1]], axis=1)   # token shift
+    mix = p["mix"].astype(x.dtype)
+    xs = [x + (x_prev - x) * mix[i][None, None, :] for i in range(5)]
+    r = linear(p["wr"], xs[0]).reshape(b, l, nh, ds)
+    k = linear(p["wk"], xs[1]).reshape(b, l, nh, ds)
+    v = linear(p["wv"], xs[2]).reshape(b, l, nh, ds)
+    w_raw = linear(p["ww"], xs[3]).astype(jnp.float32) + p["w_bias"]
+    # data-dependent decay in (0, 1): log-decay = -exp(w) (RWKV6 convention)
+    w = -jnp.exp(w_raw).reshape(b, l, nh, ds)
+    g = jax.nn.silu(linear(p["wg"], xs[4]))
+
+    y, wkv_state = linear_recurrence(
+        r, k, v, w, s0=wkv_state, u_bonus=p["u_bonus"],
+        chunk=flags.ssm_chunk, inclusive=False,
+        use_pallas=flags.use_pallas, interpret=flags.interpret, flags=flags,
+    )
+    y = y.reshape(b, l, inner)
+    y = rms_norm(y, p["ln_g"], cfg.norm_eps) * g
+    return linear(p["wo"], y), (x[:, -1:, :], wkv_state)
+
+
+def init_rwkv_channel_mix(key, cfg) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "mix": jnp.full((2, cfg.d_model), 0.5, jnp.float32),
+        "wk": init_linear(ks[0], cfg.d_model, cfg.d_ff),
+        "wv": init_linear(ks[1], cfg.d_ff, cfg.d_model, scale=cfg.d_ff ** -0.5),
+    }
+
+
+def rwkv_channel_mix(p, x, shift_state=None):
+    b, l, d = x.shape
+    prev = (
+        jnp.zeros((b, 1, d), x.dtype) if shift_state is None
+        else shift_state.astype(x.dtype)
+    )
+    x_prev = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    mix = p["mix"].astype(x.dtype)
+    xk = x + (x_prev - x) * mix[0][None, None, :]
+    h = jnp.square(jax.nn.relu(linear(p["wk"], xk)))
+    return linear(p["wv"], h), x[:, -1:, :]
+
+
+def init_rwkv_state(cfg, batch: int, dtype=jnp.float32):
+    nh, ds, inner = _dims(cfg)
+    return (
+        jnp.zeros((batch, 1, cfg.d_model), dtype),   # time-mix shift
+        jnp.zeros((batch, nh, ds, ds), jnp.float32),  # wkv state
+        jnp.zeros((batch, 1, cfg.d_model), dtype),   # channel-mix shift
+    )

@@ -1,0 +1,5 @@
+"""Optimizer substrate (in-house, no external deps)."""
+
+from .adamw import adamw_init, adamw_update, OptState  # noqa: F401
+from .schedules import cosine_warmup, linear_warmup  # noqa: F401
+from .clip import global_norm, clip_by_global_norm  # noqa: F401

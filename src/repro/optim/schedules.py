@@ -1,0 +1,21 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["linear_warmup", "cosine_warmup"]
+
+
+def linear_warmup(step, base_lr: float, warmup: int):
+    s = step.astype(jnp.float32)
+    return base_lr * jnp.minimum(1.0, (s + 1.0) / max(1, warmup))
+
+
+def cosine_warmup(step, base_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(1, warmup))
+    prog = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * cos

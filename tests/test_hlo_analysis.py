@@ -1,0 +1,75 @@
+"""Tests for the trip-count-aware HLO analyzer (roofline data source)."""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def test_scan_trip_count_exact():
+    def f(x, ws):
+        def step(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(step, x, ws)
+        return y.sum()
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((10, 128, 128), jnp.float32)
+    txt = jax.jit(f).lower(x, ws).compile().as_text()
+    s = analyze_hlo(txt)
+    assert s["dot_flops"] == 10 * 2 * 128 ** 3
+    assert s["dynamic_trip_warnings"] == 0
+
+
+def test_nested_scan_multiplies():
+    def f(x, ws):
+        def outer(c, wg):
+            def inner(ci, w):
+                return ci @ w, None
+            c, _ = jax.lax.scan(inner, c, wg)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y.sum()
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((3, 4, 64, 64), jnp.float32)
+    txt = jax.jit(f).lower(x, ws).compile().as_text()
+    s = analyze_hlo(txt)
+    assert s["dot_flops"] == 12 * 2 * 64 ** 3
+
+
+def test_collective_bytes_counted():
+    import os
+    # this test relies on >1 device from the session-wide default; if the
+    # runner has a single CPU device the module has no collectives — skip.
+    if len(jax.devices()) < 2:
+        import pytest
+        pytest.skip("needs >1 device")
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = jax.make_mesh((len(jax.devices()),), ("d",))
+    x = jax.ShapeDtypeStruct((8, 128), jnp.float32)
+
+    def f(a):
+        return a.sum(axis=0)
+
+    sh = NamedSharding(mesh, P("d", None))
+    txt = (
+        jax.jit(f, in_shardings=(sh,), out_shardings=NamedSharding(mesh, P()))
+        .lower(x).compile().as_text()
+    )
+    s = analyze_hlo(txt)
+    assert s.collective_bytes > 0
+
+
+def test_dot_flops_simple():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((64, 16), jnp.float32)
+    txt = jax.jit(f).lower(a, b).compile().as_text()
+    s = analyze_hlo(txt)
+    assert s["dot_flops"] == 2 * 32 * 64 * 16

@@ -1,0 +1,170 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, fault tolerance,
+elastic re-meshing, sharding rules."""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager, restore_checkpoint, save_checkpoint
+from repro.data import SyntheticLMDataset
+from repro.distributed import HeartbeatMonitor, StragglerPolicy, plan_remesh
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, cosine_warmup
+
+
+# ------------------------------------------------------------------ optim
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    target = jnp.asarray([1.0, 2.0])
+    for _ in range(300):
+        grads = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, state = adamw_update(params, grads, state, 0.05,
+                                     weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+    assert int(state["step"]) == 300
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones(4) * 10.0}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(norm) - 20.0) < 1e-4
+    got = float(jnp.linalg.norm(clipped["a"]))
+    assert abs(got - 1.0) < 1e-4
+
+
+def test_cosine_warmup_schedule():
+    lrs = [float(cosine_warmup(jnp.asarray(s), 1.0, 10, 100)) for s in range(100)]
+    assert lrs[0] < 0.2
+    assert abs(max(lrs) - 1.0) < 0.1
+    assert lrs[-1] < 0.2
+
+
+# ------------------------------------------------------------------ data
+def test_data_deterministic_and_step_indexed():
+    ds = SyntheticLMDataset(vocab=100, seq_len=16, global_batch=8, seed=1)
+    b1 = ds.batch(7)
+    b2 = ds.batch(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(ds.batch(8)["tokens"], b1["tokens"])
+    # next-token structure
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_data_host_sharding_partitions():
+    ds = SyntheticLMDataset(vocab=50, seq_len=8, global_batch=8, seed=2)
+    full = [ds.batch(3, host_id=h, num_hosts=4)["tokens"] for h in range(4)]
+    assert all(f.shape == (2, 8) for f in full)
+    # learnability: the markov structure bounds the successor set
+    b = ds.batch(0)
+    succ = {}
+    for row in b["tokens"]:
+        for a, c in zip(row[:-1], row[1:]):
+            succ.setdefault(int(a), set()).add(int(c))
+    avg = np.mean([len(v) for v in succ.values()])
+    assert avg <= 8 * len(ds.tables)  # branch * tables upper bound
+
+
+# ------------------------------------------------------------------ checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"params": {"w": np.arange(6, dtype=np.float32).reshape(2, 3)},
+            "opt": {"m": np.ones(3)}}
+    save_checkpoint(str(tmp_path), 5, tree)
+    zero = jax.tree.map(np.zeros_like, tree)
+    restored, step = restore_checkpoint(str(tmp_path), zero)
+    assert step == 5
+    np.testing.assert_array_equal(restored["params"]["w"], tree["params"]["w"])
+
+
+def test_checkpoint_ignores_uncommitted(tmp_path):
+    tree = {"w": np.ones(2)}
+    path = save_checkpoint(str(tmp_path), 1, tree)
+    os.makedirs(str(tmp_path / "step_00000009"))  # crashed partial write
+    restored, step = restore_checkpoint(str(tmp_path), {"w": np.zeros(2)})
+    assert step == 1
+
+
+def test_checkpoint_manager_async_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (10, 20, 30):
+        mgr.save_async(s, {"w": np.full(3, s, np.float32)})
+    mgr.wait()
+    assert mgr.latest_step() == 30
+    restored, step = mgr.restore({"w": np.zeros(3, np.float32)})
+    assert step == 30 and restored["w"][0] == 30
+    kept = [n for n in os.listdir(tmp_path) if n.startswith("step_")]
+    assert len(kept) == 2  # retention
+
+
+def test_train_restart_resumes(tmp_path):
+    """End-to-end restart: train, 'crash', restart, verify continuation."""
+    from repro.launch.train import main
+
+    args = ["--arch", "smollm-360m", "--reduced", "--steps", "6",
+            "--batch", "2", "--seq", "32", "--ckpt-dir", str(tmp_path),
+            "--ckpt-every", "3", "--log-every", "100"]
+    main(args)
+    r2 = main(args[:4] + ["12"] + args[5:])  # resumes from step 6
+    assert r2["steps"] <= 12 - 3  # restored, so fewer than 12 fresh steps
+
+
+# ------------------------------------------------------------------ fault tolerance
+def test_heartbeat_monitor_detects_failures():
+    t = [0.0]
+    mon = HeartbeatMonitor([0, 1, 2], timeout_s=10.0, clock=lambda: t[0])
+    t[0] = 5.0
+    mon.beat(0); mon.beat(1)
+    t[0] = 12.0
+    assert mon.check() == [2]
+    assert mon.healthy == [0, 1]
+    mon.rejoin(2)
+    assert mon.healthy == [0, 1, 2]
+
+
+def test_straggler_policy_flags_and_evicts():
+    pol = StragglerPolicy(factor=1.5, patience=3)
+    verdicts = []
+    for _ in range(10):
+        verdicts.append(pol.record_step({0: 1.0, 1: 1.0, 2: 1.0, 3: 2.5}))
+    assert any(3 in v.rebalance for v in verdicts)
+    share = pol.host_share([0, 1, 2, 3], [3])
+    assert share[3] < share[0]
+    for _ in range(10):
+        v = pol.record_step({0: 1.0, 1: 1.0, 2: 1.0, 3: 10.0})
+    assert 3 in v.evict
+
+
+def test_elastic_remesh_plans():
+    full = plan_remesh(512, model_axis=16, chips_per_pod=256)
+    assert full.mesh_shape == (2, 16, 16)
+    degraded = plan_remesh(500, model_axis=16, chips_per_pod=256)
+    assert degraded.chips_used <= 500
+    assert degraded.mesh_shape[-1] == 16  # model axis preserved
+    single = plan_remesh(200, model_axis=16, chips_per_pod=256)
+    assert single.mesh_shape == (12, 16)
+    with pytest.raises(RuntimeError):
+        plan_remesh(8, model_axis=16)
+
+
+# ------------------------------------------------------------------ sharding rules
+def test_param_sharding_rules_cover_big_leaves():
+    """Every weight matrix leaf must have a non-replicated spec — catching
+    rule-regression that would silently replicate a 100GB tensor."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get_config, list_archs
+    from repro.distributed.sharding import _path_str, _spec_for
+    from repro.launch.steps import abstract_params
+
+    for arch in list_archs():
+        cfg = get_config(arch)
+        shapes = abstract_params(cfg)
+        for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+            if np.prod(leaf.shape) < 10_000_000:
+                continue
+            spec = _spec_for(_path_str(path), leaf.ndim)
+            assert spec != P(), (arch, _path_str(path), leaf.shape)

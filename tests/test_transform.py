@@ -1,0 +1,65 @@
+"""Tests for the beyond-paper medium-node splitting (core.transform)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import api
+from repro.core.csr import from_coo, random_rhs, serial_solve
+from repro.core.matrices import generate
+from repro.core.transform import split_heavy_nodes
+
+
+def test_split_equivalence_on_suite():
+    for name in ["hub_wall", "hub_small", "ckt_rajat04", "band_cz"]:
+        mat = generate(name)
+        b = random_rhs(mat, 3)
+        ref = serial_solve(mat, b)
+        prog, split = api.compile_split(mat, max_indegree=48)
+        got = api.solve_split(prog, split, b)
+        np.testing.assert_allclose(got, ref, rtol=5e-4, atol=5e-4)
+
+
+def test_split_bounds_indegree():
+    mat = generate("hub_wall")
+    split = split_heavy_nodes(mat, max_indegree=32)
+    assert split.mat.in_degree().max() <= 32 + split.n_aux  # parent gets aux edges
+    # aux rows created for every heavy chunk
+    assert split.n_aux > 0
+    # identity mapping for untouched systems
+    sp2 = split_heavy_nodes(generate("chain_1k"), max_indegree=32)
+    assert sp2.n_aux == 0
+    assert sp2.mat.n == generate("chain_1k").n
+
+
+def test_split_speedup_on_load_imbalance():
+    """The paper's §V-E open problem: splitting must beat the plain medium
+    dataflow AND the fine baseline on pure hub-wall load imbalance."""
+    mat = generate("hub_wall")
+    base = api.compile(mat)
+    prog, split = api.compile_split(mat, max_indegree=64)
+    assert prog.stats.cycles < base.stats.cycles / 3
+    fine = api.baseline_fine(mat)
+    flops = 2 * mat.nnz - mat.n
+    gops_split = flops / (prog.stats.cycles * prog.config.clock_period_s) / 1e9
+    assert gops_split > fine.throughput_gops()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 9))
+def test_split_equivalence_property(seed, max_indeg):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(5, 60))
+    rows, cols = [], []
+    for i in range(1, n):
+        m = rng.random(i) < 0.4
+        for j in np.nonzero(m)[0]:
+            rows.append(i)
+            cols.append(int(j))
+    mat = from_coo(n, rows, cols, rng.uniform(-1, 1, len(rows)),
+                   rng.uniform(1, 2, n), name=f"h{seed}")
+    b = rng.standard_normal(n)
+    ref = serial_solve(mat, b)
+    split = split_heavy_nodes(mat, max_indegree=max_indeg)
+    prog = api.compile(split.mat)
+    got = split.extract(api.solve_numpy(prog, split.expand_rhs(b)))
+    np.testing.assert_allclose(got, ref, rtol=5e-4, atol=5e-4)
