@@ -13,6 +13,7 @@ import sys
 import time
 
 from . import (
+    batched_rhs,
     compiler_scaling,
     node_splitting,
     dataflow_comparison,
@@ -32,6 +33,7 @@ MODULES = {
     "table3": suite_stats,
     "table4": compiler_scaling,
     "beyond": node_splitting,
+    "batched": batched_rhs,
 }
 
 

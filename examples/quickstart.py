@@ -31,11 +31,22 @@ def main() -> None:
     b = random_rhs(mat, seed=42)
     x_ref = serial_solve(mat, b)
     x_jax = api.solve(prog, b)                      # lax.scan executor
-    x_pal = sptrsv_kernel.solve(prog, b)            # Pallas kernel (interpret)
+    x_pal = sptrsv_kernel.solve(prog, b)            # Pallas kernel
     print("jax executor   max err:", float(np.abs(x_jax - x_ref).max()))
     print("pallas kernel  max err:", float(np.abs(x_pal - x_ref).max()))
 
-    # 4. compare the three dataflows of the paper (Fig. 6 / Fig. 9a)
+    # 4. batched multi-RHS: one instruction-stream pass solves all columns
+    B = 8
+    rng = np.random.default_rng(0)
+    bmat = rng.standard_normal((mat.n, B))
+    x_bat = api.solve_batch(prog, bmat)             # [n, B] in one pass
+    refs = np.stack([serial_solve(mat, bmat[:, i]) for i in range(B)], axis=1)
+    print(f"batched (B={B})  max err:", float(np.abs(x_bat - refs).max()))
+    solver = api.make_solver(prog, batch=B)         # cached: later calls
+    x_bat2 = np.asarray(solver(bmat))               # reuse the same trace
+    assert np.allclose(x_bat, x_bat2)
+
+    # 5. compare the three dataflows of the paper (Fig. 6 / Fig. 9a)
     coarse = api.baseline_coarse(mat).stats
     fine = api.baseline_fine(mat)
     print(f"cycles: coarse={coarse.cycles} fine={fine.effective_cycles:.0f} "

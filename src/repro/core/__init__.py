@@ -9,5 +9,10 @@ from . import api, dag, matrices  # noqa: F401
 from .csr import TriCSR, serial_solve  # noqa: F401
 from .program import AccelConfig, Program, ScheduleStats  # noqa: F401
 from .schedule import compile_program  # noqa: F401
-from .executor import execute_jax, execute_numpy, make_jax_executor  # noqa: F401
+from .executor import (  # noqa: F401
+    execute_jax,
+    execute_numpy,
+    make_jax_executor,
+    pad_batch,
+)
 from .fine import FineConfig, schedule_fine  # noqa: F401

@@ -4,7 +4,15 @@
     mat = api.matrix("ckt_add20")
     prog = api.compile(mat)                      # medium dataflow, ICR, psum
     x = api.solve(prog, b)                       # JAX executor
+    X = api.solve_batch(prog, B_matrix)          # many RHS, one stream pass
+    solver = api.make_solver(prog, batch=32)     # cached jitted closure
     api.report(prog)                             # paper metrics
+
+Batched multi-RHS execution: the compiled VLIW program depends only on L,
+so one pass over the instruction stream can solve many right-hand sides at
+once (`solve_batch`, or `solve` with a 2-D ``b``).  Executors are cached
+per (program identity, padded batch width) — see ``executor.pad_batch`` —
+so repeated solves never retrace or recompile.
 """
 
 from __future__ import annotations
@@ -14,7 +22,7 @@ import numpy as np
 from . import matrices
 from .csr import TriCSR, random_rhs, serial_solve
 from .dag import DagInfo, analyze
-from .executor import execute_jax, execute_numpy, make_jax_executor
+from .executor import as_batch, execute_jax, execute_numpy, make_jax_executor
 from .fine import FineConfig, FineStats, schedule_fine
 from .program import AccelConfig, Program
 from .schedule import compile_program
@@ -23,6 +31,8 @@ __all__ = [
     "matrix",
     "compile",
     "solve",
+    "solve_batch",
+    "make_solver",
     "solve_numpy",
     "reference_solve",
     "report",
@@ -42,10 +52,41 @@ def compile(mat: TriCSR, cfg: AccelConfig | None = None) -> Program:  # noqa: A0
 
 
 def solve(prog: Program, b: np.ndarray) -> np.ndarray:
+    """Solve Lx=b with the cached JAX executor.
+
+    ``b`` may be ``[n]`` or ``[n, B]``; 2-D input delegates to the batched
+    path (one instruction-stream pass for all B columns).
+    """
     return execute_jax(prog, b)
 
 
+def solve_batch(prog: Program, b_matrix: np.ndarray) -> np.ndarray:
+    """Solve Lx=b for every column of ``b_matrix`` (shape ``[n, B]``).
+
+    One pass over the compiled instruction stream solves all B right-hand
+    sides; the batch axis is padded to a lane-friendly width and the jitted
+    executor is cached per (program, padded width), so repeated calls —
+    including nearby batch sizes — never retrace.  A 1-D ``b`` is treated
+    as ``B=1`` and returns shape ``[n, 1]``.
+    """
+    bmat, _ = as_batch(b_matrix)
+    return execute_jax(prog, bmat)
+
+
+def make_solver(prog: Program, batch: int | None = None):
+    """Return a cached jitted solve closure for `prog`.
+
+    * ``batch=None`` — `solver(b[n]) -> x[n]`;
+    * ``batch=B``    — `solver(b[n, B]) -> x[n, B]` (batched multi-RHS).
+
+    The closure reuses the per-program executor cache: building it twice
+    (or solving repeatedly) costs one trace total per padded batch width.
+    """
+    return make_jax_executor(prog, batch=batch)
+
+
 def solve_numpy(prog: Program, b: np.ndarray) -> np.ndarray:
+    """Reference numpy executor; accepts ``[n]`` or ``[n, B]`` like `solve`."""
     return execute_numpy(prog, b)
 
 

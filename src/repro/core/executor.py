@@ -1,9 +1,10 @@
 """Executors for compiled VLIW programs.
 
 Three implementations of identical semantics:
-  * `execute_numpy`  — simple per-cycle Python/numpy loop (debug oracle);
+  * `execute_numpy`  — per-cycle numpy loop, vectorized over CUs and batch
+                       (debug oracle);
   * `execute_jax`    — `jax.lax.scan` over cycles, fully vectorized over CUs
-                       (the production CPU/TPU path for moderate n);
+                       and right-hand sides (the production CPU/TPU path);
   * the Pallas kernel in `repro.kernels.sptrsv` (VMEM-resident register
     files, BlockSpec-tiled instruction stream).
 
@@ -12,9 +13,25 @@ Per-cycle semantics (see program.py): the psum control is applied first
 PE op executes.  Edges only ever read x values finalized in *earlier*
 cycles (the scheduler guarantees it), so a cycle can be evaluated as one
 parallel gather/FMA/scatter over all CUs.
+
+Batched multi-RHS execution
+---------------------------
+The instruction stream depends only on the matrix L, not on b, so one pass
+over the stream can solve `B` right-hand sides at once: state becomes
+``x[n_pad, B]``, ``feedback[P, B]``, ``rf[P, S, B]`` and every per-cycle
+gather/FMA/select/scatter broadcasts the instruction word over the batch
+axis.  This amortizes instruction-stream traffic and jit/dispatch overhead
+across the batch — the software analogue of streaming the VLIW program once
+while the datapath processes many vectors.
+
+Executors are cached per compiled program and *padded* batch width
+(`pad_batch`), so repeated solves — including nearby batch sizes that pad
+to the same width — never retrace.
 """
 
 from __future__ import annotations
+
+import weakref
 
 import numpy as np
 
@@ -24,6 +41,7 @@ import jax.numpy as jnp
 from .program import (
     OP_EDGE,
     OP_FINAL,
+    OP_NOP,
     PS_KEEP,
     PS_LOAD,
     PS_RESET,
@@ -33,7 +51,47 @@ from .program import (
 )
 from .schedule import PSUM_OVERFLOW_SLOTS
 
-__all__ = ["execute_numpy", "execute_jax", "make_jax_executor"]
+__all__ = [
+    "as_batch",
+    "execute_numpy",
+    "execute_jax",
+    "make_jax_executor",
+    "pad_batch",
+    "trace_count",
+]
+
+BATCH_PAD = 8  # batch widths are padded to a multiple of this (lane-friendly)
+
+# Bumped (at trace time only) whenever a jax executor is traced; tests use it
+# to assert the per-program cache prevents retracing.
+_TRACE_COUNT = 0
+
+# prog -> {padded_batch_width -> jitted solve}; weak keys let programs die.
+_EXEC_CACHE: "weakref.WeakKeyDictionary[Program, dict]" = weakref.WeakKeyDictionary()
+
+
+def trace_count() -> int:
+    """Number of jax-executor traces so far (cache-hit observability)."""
+    return _TRACE_COUNT
+
+
+def pad_batch(width: int) -> int:
+    """Round a batch width up to the lane-friendly padded width."""
+    if width <= 1:
+        return 1
+    return -(-width // BATCH_PAD) * BATCH_PAD
+
+
+def as_batch(b: np.ndarray, dtype=None) -> tuple[np.ndarray, bool]:
+    """Normalize a RHS to ``([n, B], was_1d)`` — shared by all executors.
+
+    With ``dtype=None``, arrays (including device-resident jax arrays) pass
+    through without a host copy; only array-likes are coerced.
+    """
+    if dtype is not None or not hasattr(b, "ndim"):
+        b = np.asarray(b, dtype=dtype)
+    single = b.ndim == 1
+    return (b[:, None] if single else b), single
 
 
 def _psum_slots(prog: Program) -> int:
@@ -42,46 +100,61 @@ def _psum_slots(prog: Program) -> int:
 
 
 def execute_numpy(prog: Program, b: np.ndarray) -> np.ndarray:
-    """Reference interpretation of the instruction stream."""
+    """Reference interpretation of the instruction stream.
+
+    Accepts ``b`` of shape ``[n]`` (single RHS) or ``[n, B]`` (batched);
+    returns ``x`` of the matching shape.  Each cycle is evaluated as one
+    vectorized gather/FMA/select/scatter over all CUs and all RHS columns.
+    """
+    bmat, single = as_batch(b, dtype=np.float64)
+    nb = bmat.shape[1]
+
     n, p = prog.n, prog.num_cus
-    x = np.zeros(n + 1, dtype=np.float64)
-    feedback = np.zeros(p, dtype=np.float64)
-    rf = np.zeros((p, _psum_slots(prog)), dtype=np.float64)
+    x = np.zeros((n + 1, nb), dtype=np.float64)
+    feedback = np.zeros((p, nb), dtype=np.float64)
+    rf = np.zeros((p, _psum_slots(prog), nb), dtype=np.float64)
     stream = prog.stream.astype(np.float64)
+    lanes = np.arange(p)
 
     for t in range(prog.cycles):
-        for c in range(p):
-            op = prog.opcode[t, c]
-            if op == 0:
-                continue
-            ctrl = prog.psum_ctrl[t, c]
-            slot = prog.psum_slot[t, c]
-            pv = feedback[c]
-            if ctrl == PS_RESET:
-                pv = 0.0
-            elif ctrl == PS_LOAD:
-                pv = rf[c, slot]
-            elif ctrl == PS_STORE_RESET:
-                rf[c, slot] = pv
-                pv = 0.0
-            elif ctrl == PS_SWAP:
-                pv, rf[c, slot] = rf[c, slot], pv
-            v = stream[prog.val_idx[t, c]]
-            s = prog.src_idx[t, c]
-            if op == OP_EDGE:
-                pv = pv + v * x[s]
-            else:  # OP_FINAL
-                out = (b[s] - pv) * v
-                x[prog.out_idx[t, c]] = out
-            feedback[c] = pv
-    return x[:n]
+        op = prog.opcode[t]
+        active = op != OP_NOP
+        if not active.any():
+            continue
+        # NOP lanes leave psum state untouched: mask their control to KEEP.
+        ctrl = np.where(active, prog.psum_ctrl[t], PS_KEEP)
+        slot = prog.psum_slot[t].astype(np.intp)
+        ctb = ctrl[:, None]
+
+        pv = feedback
+        slot_val = rf[lanes, slot]  # [p, nb]
+        # psum control mux (S1/S2 of Fig. 4b)
+        pv = np.where(ctb == PS_RESET, 0.0, pv)
+        pv = np.where(ctb == PS_LOAD, slot_val, pv)
+        store = (ctrl == PS_STORE_RESET) | (ctrl == PS_SWAP)
+        rf[lanes[store], slot[store]] = feedback[store]
+        pv = np.where(ctb == PS_STORE_RESET, 0.0, pv)
+        pv = np.where(ctb == PS_SWAP, slot_val, pv)
+
+        v = stream[prog.val_idx[t]][:, None]  # [p, 1]
+        src = prog.src_idx[t]
+        edge = op == OP_EDGE
+        pv = np.where(edge[:, None], pv + v * x[src], pv)
+        fin = op == OP_FINAL
+        if fin.any():
+            # finalized rows are distinct within a cycle (scheduler guarantee)
+            x[prog.out_idx[t][fin]] = (bmat[src[fin]] - pv[fin]) * v[fin]
+        feedback = pv
+    xr = x[:n]
+    return xr[:, 0] if single else xr
 
 
-def make_jax_executor(prog: Program):
-    """Build a jitted `solve(b) -> x` closure for one compiled program.
+def _build_jax_executor(prog: Program, width: int):
+    """Jitted `solve(b[n, width]) -> x[n, width]` over the instruction stream.
 
     All instruction arrays become constants folded into the jaxpr; the
-    cycle loop is a `lax.scan` whose carry is (x, feedback, psum_rf).
+    cycle loop is a `lax.scan` whose carry is (x, feedback, psum_rf), each
+    carrying a trailing batch axis of `width` RHS columns.
     """
     n, p = prog.n, prog.num_cus
     ops = jnp.asarray(prog.opcode.astype(np.int32))
@@ -94,42 +167,113 @@ def make_jax_executor(prog: Program):
     nslots = _psum_slots(prog)
     lanes = jnp.arange(p)
 
-    def solve(b: jnp.ndarray) -> jnp.ndarray:
-        bx = jnp.concatenate([b.astype(jnp.float32), jnp.zeros((1,), jnp.float32)])
+    def solve_cols(b: jnp.ndarray) -> jnp.ndarray:
+        global _TRACE_COUNT
+        _TRACE_COUNT += 1  # runs at trace time only
+        bx = jnp.concatenate(
+            [b.astype(jnp.float32), jnp.zeros((1, width), jnp.float32)], axis=0
+        )
 
         def step(carry, instr):
             x, feedback, rf = carry
             op, vi, si, oi, ct, sl = instr
+            ctb = ct[:, None]
             pv = feedback
-            slot_val = rf[lanes, sl]
+            slot_val = rf[lanes, sl]  # [p, width]
             # psum control mux (S1/S2 of Fig. 4b)
-            pv = jnp.where(ct == PS_RESET, 0.0, pv)
-            pv = jnp.where(ct == PS_LOAD, slot_val, pv)
+            pv = jnp.where(ctb == PS_RESET, 0.0, pv)
+            pv = jnp.where(ctb == PS_LOAD, slot_val, pv)
             store_val = jnp.where(
-                (ct == PS_STORE_RESET) | (ct == PS_SWAP), feedback, slot_val
+                (ctb == PS_STORE_RESET) | (ctb == PS_SWAP), feedback, slot_val
             )
             rf = rf.at[lanes, sl].set(store_val)
-            pv = jnp.where(ct == PS_STORE_RESET, 0.0, pv)
-            pv = jnp.where(ct == PS_SWAP, slot_val, pv)
+            pv = jnp.where(ctb == PS_STORE_RESET, 0.0, pv)
+            pv = jnp.where(ctb == PS_SWAP, slot_val, pv)
 
-            v = stream[vi]
-            pv = jnp.where(op == OP_EDGE, pv + v * x[si], pv)
+            v = stream[vi][:, None]
+            pv = jnp.where((op == OP_EDGE)[:, None], pv + v * x[si], pv)
             outv = (bx[si] - pv) * v
-            # non-FINAL lanes scatter into the dummy slot x[n]
+            # non-FINAL lanes scatter into the dummy row x[n]
             write_idx = jnp.where(op == OP_FINAL, oi, n)
             x = x.at[write_idx].set(outv, mode="promise_in_bounds")
             return (x, pv, rf), ()
 
-        x0 = jnp.zeros(n + 1, dtype=jnp.float32)
-        f0 = jnp.zeros(p, dtype=jnp.float32)
-        rf0 = jnp.zeros((p, nslots), dtype=jnp.float32)
+        x0 = jnp.zeros((n + 1, width), dtype=jnp.float32)
+        f0 = jnp.zeros((p, width), dtype=jnp.float32)
+        rf0 = jnp.zeros((p, nslots, width), dtype=jnp.float32)
         (x, _, _), _ = jax.lax.scan(
             step, (x0, f0, rf0), (ops, vidx, sidx, oidx, pctl, pslt)
         )
         return x[:n]
 
-    return jax.jit(solve)
+    if width == 1:
+        # single-RHS form: `solve(b[n]) -> x[n]`, wrap/unwrap inside the jit
+        # so the hot path stays one dispatch
+        return jax.jit(lambda b: solve_cols(b[:, None])[:, 0])
+    return jax.jit(solve_cols)
+
+
+def _cached_executor(prog: Program, width: int):
+    per_prog = _EXEC_CACHE.get(prog)
+    if per_prog is None:
+        per_prog = {}
+        _EXEC_CACHE[prog] = per_prog
+    fn = per_prog.get(width)
+    if fn is None:
+        fn = _build_jax_executor(prog, width)
+        per_prog[width] = fn
+    return fn
+
+
+def make_jax_executor(prog: Program, batch: int | None = None):
+    """Build (or fetch from cache) a jitted solve closure for `prog`.
+
+    * ``batch=None`` — `solve(b[n]) -> x[n]`, the classic single-RHS form.
+    * ``batch=B``    — `solve(b[n, B]) -> x[n, B]`: one pass over the
+      instruction stream solves all B columns.
+
+    The underlying jitted executor is cached per (program identity, padded
+    batch width): repeated calls — and batch widths that pad to the same
+    width — reuse the trace.
+    """
+    if batch is None:
+        core = _cached_executor(prog, 1)
+        n = prog.n
+
+        def solve_one(b):
+            # np-side cast (no-copy when already f32) keeps one trace per
+            # program regardless of caller dtype; jax arrays and tracers
+            # pass through untouched so the closure stays transformable
+            if not isinstance(b, jax.Array):
+                b = np.asarray(b, np.float32)
+            if b.shape != (n,):
+                raise ValueError(f"expected b of shape {(n,)}, got {b.shape}")
+            return core(b)
+
+        return solve_one
+
+    width = pad_batch(batch)
+    core = _cached_executor(prog, width)
+    n, nb = prog.n, batch
+
+    def solve_many(bmat):
+        bmat = jnp.asarray(bmat, dtype=jnp.float32)
+        if bmat.shape != (n, nb):
+            raise ValueError(f"expected b of shape {(n, nb)}, got {bmat.shape}")
+        if nb == 0:
+            return jnp.zeros((n, 0), jnp.float32)
+        if width == 1:
+            return core(bmat[:, 0])[:, None]  # width-1 core is [n] -> [n]
+        if nb != width:
+            bmat = jnp.pad(bmat, ((0, 0), (0, width - nb)))
+        return core(bmat)[:, :nb]
+
+    return solve_many
 
 
 def execute_jax(prog: Program, b: np.ndarray) -> np.ndarray:
-    return np.asarray(make_jax_executor(prog)(jnp.asarray(b)))
+    """Solve via the cached jax executor; `b` is `[n]` or `[n, B]`."""
+    bmat, single = as_batch(b)
+    if single:
+        return np.asarray(make_jax_executor(prog)(bmat[:, 0]))
+    return np.asarray(make_jax_executor(prog, batch=bmat.shape[1])(bmat))

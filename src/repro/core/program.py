@@ -116,9 +116,13 @@ class ScheduleStats:
         }
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Program:
-    """Compiled VLIW instruction stream + reordered stream memory."""
+    """Compiled VLIW instruction stream + reordered stream memory.
+
+    ``eq=False`` keeps identity hashing/weakref support so executors can be
+    cached per compiled program (see ``executor.make_jax_executor``).
+    """
 
     config: AccelConfig
     n: int

@@ -16,6 +16,12 @@ written to the output on the last step.
 The kernel is branch-free: every cycle executes the same gather/FMA/select/
 scatter pattern for all lanes, with opcodes selecting behaviour via
 `jnp.where` — the VLIW philosophy carried into the VPU.
+
+Multi-RHS batching: the solve state carries a trailing batch axis
+(`x[n_pad, B]`, `feedback[P, B]`, `rf[P, S, B]`), so one pass over the
+instruction stream solves B right-hand sides — the instruction words
+broadcast over the batch axis, amortizing instruction traffic exactly as
+the VLIW program amortizes scheduling across CUs.
 """
 
 from __future__ import annotations
@@ -36,7 +42,12 @@ from repro.core.program import (
     PS_SWAP,
 )
 
-__all__ = ["sptrsv_pallas"]
+__all__ = ["sptrsv_pallas", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    """Auto-detect: compile natively on TPU, interpret elsewhere."""
+    return jax.default_backend() != "tpu"
 
 
 def _kernel(
@@ -47,13 +58,13 @@ def _kernel(
     out_ref,    # [TB, P] int32
     ctl_ref,    # [TB, P] int32
     slt_ref,    # [TB, P] int32
-    b_ref,      # [n_pad]  f32  (whole vector each step)
+    b_ref,      # [n_pad, B]  f32  (whole matrix each step)
     # outputs
-    x_out_ref,  # [n_pad]  f32
+    x_out_ref,  # [n_pad, B]  f32
     # scratch
-    x_ref,      # [n_pad]  f32
-    fb_ref,     # [P]      f32
-    rf_ref,     # [P, S]   f32
+    x_ref,      # [n_pad, B]  f32
+    fb_ref,     # [P, B]      f32
+    rf_ref,     # [P, S, B]   f32
     *,
     cycles_per_block: int,
     num_blocks: int,
@@ -72,14 +83,14 @@ def _kernel(
     def cycle(t, carry):
         x, fb, rf = carry
         op = op_ref[t, :]
-        v = val_ref[t, :]
+        v = val_ref[t, :][:, None]      # [P, 1] broadcast over batch
         si = src_ref[t, :]
         oi = out_ref[t, :]
-        ct = ctl_ref[t, :]
+        ct = ctl_ref[t, :][:, None]
         sl = slt_ref[t, :]
 
         pv = fb
-        slot_val = rf[lanes, sl]
+        slot_val = rf[lanes, sl]        # [P, B]
         pv = jnp.where(ct == PS_RESET, 0.0, pv)
         pv = jnp.where(ct == PS_LOAD, slot_val, pv)
         store_val = jnp.where((ct == PS_STORE_RESET) | (ct == PS_SWAP), fb, slot_val)
@@ -87,10 +98,11 @@ def _kernel(
         pv = jnp.where(ct == PS_STORE_RESET, 0.0, pv)
         pv = jnp.where(ct == PS_SWAP, slot_val, pv)
 
-        pv = jnp.where(op == OP_EDGE, pv + v * jnp.take(x, si), pv)
-        outv = (jnp.take(b, si) - pv) * v
-        widx = jnp.where(op == OP_FINAL, oi, x.shape[0] - 1)  # dummy tail slot
-        x = x.at[widx].set(jnp.where(op == OP_FINAL, outv, jnp.take(x, widx)))
+        fin = (op == OP_FINAL)[:, None]
+        pv = jnp.where((op == OP_EDGE)[:, None], pv + v * jnp.take(x, si, axis=0), pv)
+        outv = (jnp.take(b, si, axis=0) - pv) * v
+        widx = jnp.where(op == OP_FINAL, oi, x.shape[0] - 1)  # dummy tail row
+        x = x.at[widx].set(jnp.where(fin, outv, jnp.take(x, widx, axis=0)))
         return x, pv, rf
 
     x, fb, rf = jax.lax.fori_loop(
@@ -116,19 +128,21 @@ def sptrsv_pallas(
     out_idx: jnp.ndarray,  # [T, P] int32
     ctrl: jnp.ndarray,     # [T, P] int32
     slot: jnp.ndarray,     # [T, P] int32
-    b: jnp.ndarray,        # [n_pad] f32 (n + 1 dummy tail slot)
+    b: jnp.ndarray,        # [n_pad, B] f32 (n + 1 dummy tail row)
     *,
     cycles_per_block: int = 128,
     num_slots: int = 12,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
+    if interpret is None:
+        interpret = default_interpret()
     t, p = opcode.shape
     assert t % cycles_per_block == 0, "pad the instruction stream first"
     num_blocks = t // cycles_per_block
-    n_pad = b.shape[0]
+    n_pad, nb = b.shape
 
     instr_spec = pl.BlockSpec((cycles_per_block, p), lambda g: (g, 0))
-    full_spec = pl.BlockSpec((n_pad,), lambda g: (0,))
+    full_spec = pl.BlockSpec((n_pad, nb), lambda g: (0, 0))
 
     kernel = functools.partial(
         _kernel, cycles_per_block=cycles_per_block, num_blocks=num_blocks
@@ -138,11 +152,11 @@ def sptrsv_pallas(
         grid=(num_blocks,),
         in_specs=[instr_spec] * 6 + [full_spec],
         out_specs=full_spec,
-        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n_pad, nb), jnp.float32),
         scratch_shapes=[
-            pltpu.VMEM((n_pad,), jnp.float32),
-            pltpu.VMEM((p,), jnp.float32),
-            pltpu.VMEM((p, num_slots), jnp.float32),
+            pltpu.VMEM((n_pad, nb), jnp.float32),
+            pltpu.VMEM((p, nb), jnp.float32),
+            pltpu.VMEM((p, num_slots, nb), jnp.float32),
         ],
         interpret=interpret,
     )(opcode, values, src_idx, out_idx, ctrl, slot, b)

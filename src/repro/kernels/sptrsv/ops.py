@@ -6,6 +6,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro.core.executor import as_batch, pad_batch
 from repro.core.program import Program
 from repro.core.schedule import PSUM_OVERFLOW_SLOTS
 
@@ -28,15 +29,27 @@ def solve(
     b: np.ndarray,
     *,
     cycles_per_block: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> np.ndarray:
     """Solve Lx=b by executing `prog` in the Pallas kernel.
+
+    ``b`` may be ``[n]`` (single RHS) or ``[n, B]`` (batched multi-RHS);
+    the result has the matching shape.  Batched solves stream the
+    instruction tensor once for all B columns; the batch axis is padded to
+    a lane-friendly width (`pad_batch`) so nearby widths share one compile.
+
+    ``interpret=None`` auto-detects: native compile on TPU, interpreter
+    elsewhere.
 
     The wrapper performs the compiler-side data staging the hardware's
     stream memory provides: values are pre-gathered per instruction word so
     the kernel streams them sequentially (no positional indirection, as in
     the paper's stream-memory design).
     """
+    bmat, single = as_batch(b)
+    nb = bmat.shape[1]
+    nb_pad = pad_batch(nb)
+
     t, p = prog.opcode.shape
     t_pad = -(-t // cycles_per_block) * cycles_per_block
 
@@ -52,8 +65,8 @@ def solve(
         _pad_to(prog.psum_ctrl.astype(np.int32), t_pad),
         _pad_to(prog.psum_slot.astype(np.int32), t_pad),
     ]
-    b_pad = np.zeros(n_pad, dtype=np.float32)
-    b_pad[: prog.n] = b
+    b_pad = np.zeros((n_pad, nb_pad), dtype=np.float32)
+    b_pad[: prog.n, :nb] = bmat
     n_slots = max(prog.config.psum_words + PSUM_OVERFLOW_SLOTS,
                   prog.num_slots or 0)
     x = sptrsv_pallas(
@@ -63,4 +76,5 @@ def solve(
         num_slots=n_slots,
         interpret=interpret,
     )
-    return np.asarray(x)[: prog.n]
+    x = np.asarray(x)[: prog.n, :nb]
+    return x[:, 0] if single else x

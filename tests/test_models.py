@@ -16,6 +16,8 @@ from repro.models import (
     train_forward,
 )
 
+pytestmark = pytest.mark.slow
+
 FLAGS = RuntimeFlags(use_pallas=False, interpret=False, remat=False)
 KEY = jax.random.PRNGKey(0)
 B, S = 2, 32

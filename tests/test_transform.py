@@ -1,7 +1,10 @@
 """Tests for the beyond-paper medium-node splitting (core.transform)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import api
 from repro.core.csr import from_coo, random_rhs, serial_solve
