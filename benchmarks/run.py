@@ -21,6 +21,7 @@ from . import (
     instruction_breakdown,
     platform_comparison,
     psum_sweep,
+    sharded_batch,
     suite_stats,
 )
 
@@ -34,6 +35,7 @@ MODULES = {
     "table4": compiler_scaling,
     "beyond": node_splitting,
     "batched": batched_rhs,
+    "sharded": sharded_batch,
 }
 
 

@@ -1,0 +1,98 @@
+"""Sharded batched multi-RHS: solves/sec vs device count, fixed per-device B.
+
+The batch axis of `api.solve_batch` is embarrassingly parallel, so weak
+scaling over devices (B = ndev * B_PER_DEVICE) should hold solve latency
+roughly flat while total solves/sec grows with the device count.  Each
+device count runs in its own subprocess because
+``--xla_force_host_platform_device_count`` must be set before jax
+initializes; the worker times the sharded solver (`mesh=`) against the
+single-device batched executor at the same total B.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+DEVICE_COUNTS = [1, 2, 4, 8]
+B_PER_DEVICE = 16
+MATRICES = ["band_cz", "ckt_add20"]
+
+
+def worker(ndev: int) -> None:
+    """Runs inside the subprocess (XLA_FLAGS already set by the parent)."""
+    import numpy as np
+
+    import jax
+
+    from repro.core import api, shard
+    from repro.core.matrices import generate
+
+    from .common import timeit
+
+    assert len(jax.devices()) == ndev, (len(jax.devices()), ndev)
+    mesh = shard.batch_mesh()
+    B = ndev * B_PER_DEVICE
+    rows = []
+    for name in MATRICES:
+        mat = generate(name)
+        prog = api.compile(mat)
+        flops = 2 * mat.nnz - mat.n
+        bmat = np.random.default_rng(0).standard_normal(
+            (mat.n, B)).astype(np.float32)
+
+        sharded = api.make_solver(prog, batch=B, mesh=mesh)
+        local = api.make_solver(prog, batch=B)
+        t_sh = timeit(lambda: np.asarray(sharded(bmat)))
+        t_lo = timeit(lambda: np.asarray(local(bmat)))
+        rows.append({
+            "name": name,
+            "devices": ndev,
+            "batch": B,
+            "sharded_solves_per_s": round(B / t_sh, 1),
+            "single_device_solves_per_s": round(B / t_lo, 1),
+            "sharded_gops": round(B * flops / t_sh / 1e9, 4),
+            "sharded_us_per_call": round(t_sh * 1e6, 1),
+        })
+    print(json.dumps(rows))
+
+
+def run() -> list[dict]:
+    rows = []
+    for ndev in DEVICE_COUNTS:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+        src = os.path.join(os.path.dirname(__file__), "..", "src")
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.sharded_batch",
+             "--worker", str(ndev)],
+            env=env, capture_output=True, text=True, timeout=900,
+            cwd=os.path.join(os.path.dirname(__file__), ".."),
+        )
+        if r.returncode != 0:
+            raise RuntimeError(f"worker ndev={ndev} failed:\n{r.stderr[-2000:]}")
+        rows.extend(json.loads(r.stdout.strip().splitlines()[-1]))
+    return rows
+
+
+def main() -> None:
+    from .common import emit
+
+    rows = run()
+    emit(rows, "sharded_batch")
+    for name in MATRICES:
+        per = {r["devices"]: r["sharded_solves_per_s"]
+               for r in rows if r["name"] == name}
+        base = per[min(per)]
+        scale = " ".join(f"{d}dev={per[d] / base:.2f}x" for d in sorted(per))
+        print(f"# {name}: solves/sec vs 1 device: {scale}")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) >= 3 and sys.argv[1] == "--worker":
+        worker(int(sys.argv[2]))
+    else:
+        main()

@@ -46,7 +46,16 @@ def main() -> None:
     x_bat2 = np.asarray(solver(bmat))               # reuse the same trace
     assert np.allclose(x_bat, x_bat2)
 
-    # 5. compare the three dataflows of the paper (Fig. 6 / Fig. 9a)
+    # 5. multi-device: shard the RHS columns over every local device
+    #    (run with XLA_FLAGS=--xla_force_host_platform_device_count=8 to
+    #    see it spread over 8 fake CPU devices; on TPU it just works)
+    from repro.core import shard
+    mesh = shard.batch_mesh()                       # 1-D mesh, all devices
+    x_sh = api.solve_batch(prog, bmat, mesh=mesh)   # columns over devices
+    print(f"sharded over {mesh.size} device(s) max err:",
+          float(np.abs(x_sh - refs).max()))
+
+    # 6. compare the three dataflows of the paper (Fig. 6 / Fig. 9a)
     coarse = api.baseline_coarse(mat).stats
     fine = api.baseline_fine(mat)
     print(f"cycles: coarse={coarse.cycles} fine={fine.effective_cycles:.0f} "

@@ -13,6 +13,12 @@ so one pass over the instruction stream can solve many right-hand sides at
 once (`solve_batch`, or `solve` with a 2-D ``b``).  Executors are cached
 per (program identity, padded batch width) — see ``executor.pad_batch`` —
 so repeated solves never retrace or recompile.
+
+Multi-device execution: pass ``mesh=`` (a `jax.sharding.Mesh`, e.g.
+`shard.batch_mesh()`) to `solve_batch` / `make_solver` to shard the RHS
+columns over devices — the instruction stream is replicated, each device
+solves its own column block (`repro.core.shard`), and executors are cached
+per (program, padded per-device width, mesh).
 """
 
 from __future__ import annotations
@@ -60,7 +66,7 @@ def solve(prog: Program, b: np.ndarray) -> np.ndarray:
     return execute_jax(prog, b)
 
 
-def solve_batch(prog: Program, b_matrix: np.ndarray) -> np.ndarray:
+def solve_batch(prog: Program, b_matrix: np.ndarray, mesh=None) -> np.ndarray:
     """Solve Lx=b for every column of ``b_matrix`` (shape ``[n, B]``).
 
     One pass over the compiled instruction stream solves all B right-hand
@@ -68,20 +74,39 @@ def solve_batch(prog: Program, b_matrix: np.ndarray) -> np.ndarray:
     executor is cached per (program, padded width), so repeated calls —
     including nearby batch sizes — never retrace.  A 1-D ``b`` is treated
     as ``B=1`` and returns shape ``[n, 1]``.
+
+    ``mesh=`` (a `jax.sharding.Mesh`) shards the B columns over devices:
+    the instruction stream is replicated and each device solves its own
+    column block (`repro.core.shard.make_sharded_solver`), cached per
+    (program, padded per-device width, mesh).
     """
     bmat, _ = as_batch(b_matrix)
+    if mesh is not None:
+        from .shard import make_sharded_solver
+
+        return np.asarray(make_sharded_solver(prog, bmat.shape[1], mesh)(bmat))
     return execute_jax(prog, bmat)
 
 
-def make_solver(prog: Program, batch: int | None = None):
+def make_solver(prog: Program, batch: int | None = None, mesh=None):
     """Return a cached jitted solve closure for `prog`.
 
     * ``batch=None`` — `solver(b[n]) -> x[n]`;
-    * ``batch=B``    — `solver(b[n, B]) -> x[n, B]` (batched multi-RHS).
+    * ``batch=B``    — `solver(b[n, B]) -> x[n, B]` (batched multi-RHS);
+    * ``batch=B, mesh=m`` — as above with the B columns sharded over the
+      devices of `jax.sharding.Mesh` ``m`` (instruction stream replicated,
+      no collectives; see `repro.core.shard`).
 
     The closure reuses the per-program executor cache: building it twice
-    (or solving repeatedly) costs one trace total per padded batch width.
+    (or solving repeatedly) costs one trace total per padded batch width —
+    per (padded per-device width, mesh) on the sharded path.
     """
+    if mesh is not None:
+        if batch is None:
+            raise ValueError("mesh= requires an explicit batch size")
+        from .shard import make_sharded_solver
+
+        return make_sharded_solver(prog, batch, mesh)
     return make_jax_executor(prog, batch=batch)
 
 
@@ -119,8 +144,8 @@ def compile_split(mat: TriCSR, cfg: AccelConfig | None = None,
                   max_indegree: int = 64):
     """Beyond-paper path: split heavy nodes (core.transform), then compile.
 
-    Returns (program, split_result); solve with
-    ``split.extract(solve(program, split.expand_rhs(b)))``.
+    Returns (program, split_result); solve with `solve_split`, which
+    accepts single (``[n]``) and batched (``[n, B]``) right-hand sides.
     """
     from .transform import split_heavy_nodes
 
@@ -128,8 +153,18 @@ def compile_split(mat: TriCSR, cfg: AccelConfig | None = None,
     return compile_program(split.mat, cfg), split
 
 
-def solve_split(prog: Program, split, b: np.ndarray) -> np.ndarray:
-    return split.extract(execute_jax(prog, split.expand_rhs(b)))
+def solve_split(prog: Program, split, b: np.ndarray, mesh=None) -> np.ndarray:
+    """Solve through a node-splitting transform; ``b`` is ``[n]`` or ``[n, B]``.
+
+    `SplitResult.expand_rhs` / `extract` preserve a trailing batch axis, so
+    node splitting composes with the batched executors and — via ``mesh=``
+    — with the multi-device sharded path.
+    """
+    eb = split.expand_rhs(np.asarray(b))
+    if mesh is not None:
+        x = solve_batch(prog, eb, mesh=mesh)
+        return split.extract(x[:, 0] if eb.ndim == 1 else x)
+    return split.extract(execute_jax(prog, eb))
 
 
 def baseline_coarse(mat: TriCSR, base: AccelConfig | None = None) -> Program:

@@ -6,7 +6,7 @@ Three implementations of identical semantics:
   * `execute_jax`    — `jax.lax.scan` over cycles, fully vectorized over CUs
                        and right-hand sides (the production CPU/TPU path);
   * the Pallas kernel in `repro.kernels.sptrsv` (VMEM-resident register
-    files, BlockSpec-tiled instruction stream).
+    files, double-buffered async-DMA instruction streaming).
 
 Per-cycle semantics (see program.py): the psum control is applied first
 (it configures the S1/S2 muxes and psum register file of Fig. 4b), then the
@@ -27,6 +27,11 @@ while the datapath processes many vectors.
 Executors are cached per compiled program and *padded* batch width
 (`pad_batch`), so repeated solves — including nearby batch sizes that pad
 to the same width — never retrace.
+
+Multi-device: `repro.core.shard` maps `build_solve_cols` over per-device
+column blocks of the batch axis with `shard_map` (its own cache, keyed per
+(program, padded per-device width, mesh)); `trace_count` observes both
+paths.
 """
 
 from __future__ import annotations
@@ -53,6 +58,8 @@ from .schedule import PSUM_OVERFLOW_SLOTS
 
 __all__ = [
     "as_batch",
+    "batched_entry",
+    "build_solve_cols",
     "execute_numpy",
     "execute_jax",
     "make_jax_executor",
@@ -149,12 +156,16 @@ def execute_numpy(prog: Program, b: np.ndarray) -> np.ndarray:
     return xr[:, 0] if single else xr
 
 
-def _build_jax_executor(prog: Program, width: int):
-    """Jitted `solve(b[n, width]) -> x[n, width]` over the instruction stream.
+def build_solve_cols(prog: Program, width: int):
+    """Unjitted `solve(b[n, width]) -> x[n, width]` over the instruction stream.
 
     All instruction arrays become constants folded into the jaxpr; the
     cycle loop is a `lax.scan` whose carry is (x, feedback, psum_rf), each
     carrying a trailing batch axis of `width` RHS columns.
+
+    This is the trace target shared by the local jit path below and the
+    multi-device `shard_map` path (`repro.core.shard`), which maps it over
+    per-device column blocks with the instruction constants replicated.
     """
     n, p = prog.n, prog.num_cus
     ops = jnp.asarray(prog.opcode.astype(np.int32))
@@ -206,6 +217,12 @@ def _build_jax_executor(prog: Program, width: int):
         )
         return x[:n]
 
+    return solve_cols
+
+
+def _build_jax_executor(prog: Program, width: int):
+    """Jitted single-device wrapper around `build_solve_cols`."""
+    solve_cols = build_solve_cols(prog, width)
     if width == 1:
         # single-RHS form: `solve(b[n]) -> x[n]`, wrap/unwrap inside the jit
         # so the hot path stays one dispatch
@@ -223,6 +240,33 @@ def _cached_executor(prog: Program, width: int):
         fn = _build_jax_executor(prog, width)
         per_prog[width] = fn
     return fn
+
+
+def batched_entry(core, n: int, batch: int, width: int, *,
+                  single_core: bool = False, place=None):
+    """Shared `solver(b[n, batch]) -> x[n, batch]` entry wrapper.
+
+    Validates the shape, pads the batch axis to ``width``, optionally
+    places the padded matrix on devices (``place``, the sharded path of
+    `core.shard`), calls ``core`` and slices the pad columns back off.
+    ``single_core`` marks a width-1 core with the `[n] -> [n]` signature.
+    """
+
+    def solve_many(bmat):
+        bmat = jnp.asarray(bmat, dtype=jnp.float32)
+        if bmat.shape != (n, batch):
+            raise ValueError(f"expected b of shape {(n, batch)}, got {bmat.shape}")
+        if batch == 0:
+            return jnp.zeros((n, 0), jnp.float32)
+        if single_core:
+            return core(bmat[:, 0])[:, None]
+        if batch != width:
+            bmat = jnp.pad(bmat, ((0, 0), (0, width - batch)))
+        if place is not None:
+            bmat = place(bmat)
+        return core(bmat)[:, :batch]
+
+    return solve_many
 
 
 def make_jax_executor(prog: Program, batch: int | None = None):
@@ -254,21 +298,7 @@ def make_jax_executor(prog: Program, batch: int | None = None):
 
     width = pad_batch(batch)
     core = _cached_executor(prog, width)
-    n, nb = prog.n, batch
-
-    def solve_many(bmat):
-        bmat = jnp.asarray(bmat, dtype=jnp.float32)
-        if bmat.shape != (n, nb):
-            raise ValueError(f"expected b of shape {(n, nb)}, got {bmat.shape}")
-        if nb == 0:
-            return jnp.zeros((n, 0), jnp.float32)
-        if width == 1:
-            return core(bmat[:, 0])[:, None]  # width-1 core is [n] -> [n]
-        if nb != width:
-            bmat = jnp.pad(bmat, ((0, 0), (0, width - nb)))
-        return core(bmat)[:, :nb]
-
-    return solve_many
+    return batched_entry(core, prog.n, batch, width, single_core=width == 1)
 
 
 def execute_jax(prog: Program, b: np.ndarray) -> np.ndarray:

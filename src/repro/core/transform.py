@@ -41,12 +41,20 @@ class SplitResult:
     n_aux: int
 
     def expand_rhs(self, b: np.ndarray) -> np.ndarray:
-        nb = np.zeros(self.mat.n, dtype=b.dtype)
+        """Lift ``b`` (``[n]`` or ``[n, B]``) into the split system's space.
+
+        Aux rows get rhs 0; any trailing batch axes are preserved so the
+        transform composes with the batched and sharded solve paths.
+        """
+        b = np.asarray(b)
+        nb = np.zeros((self.mat.n, *b.shape[1:]), dtype=b.dtype)
         nb[self.orig_index] = b
         return nb
 
     def extract(self, x_new: np.ndarray) -> np.ndarray:
-        return x_new[self.orig_index]
+        """Project a split-system solution back to the original unknowns
+        (row gather — trailing batch axes pass through untouched)."""
+        return np.asarray(x_new)[self.orig_index]
 
 
 def split_heavy_nodes(mat: TriCSR, max_indegree: int = 48) -> SplitResult:

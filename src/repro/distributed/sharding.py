@@ -25,6 +25,7 @@ __all__ = [
     "param_shardings",
     "batch_sharding",
     "cache_shardings",
+    "rhs_sharding",
     "with_dp_constraint",
 ]
 
@@ -122,6 +123,18 @@ def param_shardings(mesh: Mesh, params):
         return NamedSharding(mesh, spec)
 
     return jax.tree_util.tree_map_with_path(one, params)
+
+
+def rhs_sharding(mesh: Mesh) -> NamedSharding:
+    """Sharding for an ``[n, B]`` multi-RHS matrix: rows replicated, the B
+    column axis over ALL mesh axes.
+
+    The SpTRSV batch axis is embarrassingly parallel (the compiled
+    instruction stream depends only on L), so any mesh topology flattens
+    into one big batch axis — this is the placement `repro.core.shard` uses
+    for the multi-device batched solver.
+    """
+    return NamedSharding(mesh, P(None, mesh.axis_names))
 
 
 def batch_sharding(mesh: Mesh, batch_size: int):

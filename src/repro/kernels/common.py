@@ -1,0 +1,17 @@
+"""Helpers shared by every Pallas kernel in the package."""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["default_interpret", "resolve_interpret"]
+
+
+def default_interpret() -> bool:
+    """Auto-detect: compile natively on TPU, interpret elsewhere."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve the kernels' ``interpret: bool | None = None`` convention."""
+    return default_interpret() if interpret is None else bool(interpret)

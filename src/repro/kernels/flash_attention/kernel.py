@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import resolve_interpret
+
 __all__ = ["flash_attention_pallas"]
 
 NEG_INF = -1e30
@@ -104,8 +106,9 @@ def flash_attention_pallas(
     causal: bool = True,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
+    interpret = resolve_interpret(interpret)
     bh, lq, d = q.shape
     lk = k.shape[1]
     pad_q = (-lq) % block_q

@@ -78,7 +78,7 @@ def gqa_attention_folded(
     batch: int,
     causal: bool = True,
     use_pallas: bool = False,
-    interpret: bool = True,
+    interpret: bool | None = None,
     block_q: int = 128,
     block_k: int = 1024,
     flags=None,
@@ -121,13 +121,17 @@ def gqa_attention(
     *,
     causal: bool = True,
     use_pallas: bool = False,
-    interpret: bool = True,
+    interpret: bool | None = None,
     block_q: int = 128,
     block_k: int = 128,
     flags=None,
 ) -> jnp.ndarray:
     """Grouped-query attention on [B, L, H, D] tensors (wraps the folded
-    implementation; models fold earlier themselves — see layers.attention)."""
+    implementation; models fold earlier themselves — see layers.attention).
+
+    ``interpret=None`` auto-detects like every kernel here: native compile
+    on TPU, Pallas interpreter elsewhere (`kernels.common.default_interpret`).
+    """
     b, lq, hq, d = q.shape
     hkv = k.shape[2]
     assert hq % hkv == 0, (hq, hkv)

@@ -4,14 +4,21 @@ TPU adaptation of the paper's accelerator (DESIGN.md §1):
   * the 64 CUs map onto a 64-wide vector lane dimension;
   * the x_i / psum register files and the solution vector live in VMEM
     scratch (the software-managed scratchpads of the paper);
-  * the instruction stream is tiled HBM->VMEM in cycle blocks via BlockSpec
-    ("data in the instruction memory ... is accessed sequentially", §III-B);
+  * the instruction stream stays in HBM (`pltpu.ANY`) and is streamed into
+    VMEM in cycle blocks by explicit async DMA ("data in the instruction
+    memory ... is accessed sequentially", §III-B);
   * stream-memory values are pre-gathered per instruction word by the
     compiler wrapper (ops.py), so the kernel reads them sequentially too.
 
-Grid: one dimension over cycle blocks; the solve state (x, feedback, psum
-register file) is carried across grid steps in VMEM scratch, and x is
-written to the output on the last step.
+Double-buffered cycle-block streaming: the kernel owns two VMEM instruction
+buffers and, while executing cycle block g out of one buffer, prefetches
+block g+1 into the other (`pltpu.make_async_copy` + per-slot DMA
+semaphores).  Instruction HBM->VMEM traffic thus overlaps compute — the
+software realization of the paper's sequential stream-memory pipeline.  The
+RHS matrix b is a plain VMEM input loaded ONCE per solve (it used to ride a
+grid BlockSpec that re-fetched the full [n_pad, B] matrix every cycle
+block); the solve state (x, feedback, psum register file) is carried as
+loop state across all blocks in a single kernel invocation.
 
 The kernel is branch-free: every cycle executes the same gather/FMA/select/
 scatter pattern for all lanes, with opcodes selecting behaviour via
@@ -41,80 +48,109 @@ from repro.core.program import (
     PS_STORE_RESET,
     PS_SWAP,
 )
+from repro.kernels.common import default_interpret, resolve_interpret
 
-__all__ = ["sptrsv_pallas", "default_interpret"]
+__all__ = ["sptrsv_pallas", "default_interpret", "N_FIELDS",
+           "F_OP", "F_SRC", "F_OUT", "F_CTL", "F_SLT"]
 
-
-def default_interpret() -> bool:
-    """Auto-detect: compile natively on TPU, interpret elsewhere."""
-    return jax.default_backend() != "tpu"
+# int32 planes of the stacked instruction tensor [T, N_FIELDS, P]
+F_OP, F_SRC, F_OUT, F_CTL, F_SLT = range(5)
+N_FIELDS = 5
 
 
 def _kernel(
-    # inputs (blocked over cycles)
-    op_ref,     # [TB, P] int32
-    val_ref,    # [TB, P] f32   (pre-gathered stream values)
-    src_ref,    # [TB, P] int32
-    out_ref,    # [TB, P] int32
-    ctl_ref,    # [TB, P] int32
-    slt_ref,    # [TB, P] int32
-    b_ref,      # [n_pad, B]  f32  (whole matrix each step)
+    # inputs
+    instr_ref,  # [T, N_FIELDS, P] int32, HBM-resident (streamed by DMA)
+    val_ref,    # [T, P]           f32,   HBM-resident (pre-gathered values)
+    b_ref,      # [n_pad, B]       f32,   VMEM — loaded once per solve
     # outputs
-    x_out_ref,  # [n_pad, B]  f32
-    # scratch
-    x_ref,      # [n_pad, B]  f32
-    fb_ref,     # [P, B]      f32
-    rf_ref,     # [P, S, B]   f32
+    x_out_ref,  # [n_pad, B]       f32
     *,
     cycles_per_block: int,
     num_blocks: int,
+    num_slots: int,
 ):
-    g = pl.program_id(0)
-
-    @pl.when(g == 0)
-    def _init():
-        x_ref[...] = jnp.zeros_like(x_ref)
-        fb_ref[...] = jnp.zeros_like(fb_ref)
-        rf_ref[...] = jnp.zeros_like(rf_ref)
-
-    lanes = jax.lax.iota(jnp.int32, fb_ref.shape[0])
+    tb = cycles_per_block
+    p = instr_ref.shape[-1]
+    n_pad, nb = b_ref.shape
+    lanes = jax.lax.iota(jnp.int32, p)
     b = b_ref[...]
 
-    def cycle(t, carry):
-        x, fb, rf = carry
-        op = op_ref[t, :]
-        v = val_ref[t, :][:, None]      # [P, 1] broadcast over batch
-        si = src_ref[t, :]
-        oi = out_ref[t, :]
-        ct = ctl_ref[t, :][:, None]
-        sl = slt_ref[t, :]
+    def body(ibuf, vbuf, isem, vsem):
+        # ibuf/vbuf: [2, tb, ...] double buffers; one DMA semaphore per slot.
+        def instr_dma(slot, g):
+            return pltpu.make_async_copy(
+                instr_ref.at[pl.ds(g * tb, tb)], ibuf.at[slot], isem.at[slot]
+            )
 
-        pv = fb
-        slot_val = rf[lanes, sl]        # [P, B]
-        pv = jnp.where(ct == PS_RESET, 0.0, pv)
-        pv = jnp.where(ct == PS_LOAD, slot_val, pv)
-        store_val = jnp.where((ct == PS_STORE_RESET) | (ct == PS_SWAP), fb, slot_val)
-        rf = rf.at[lanes, sl].set(store_val)
-        pv = jnp.where(ct == PS_STORE_RESET, 0.0, pv)
-        pv = jnp.where(ct == PS_SWAP, slot_val, pv)
+        def val_dma(slot, g):
+            return pltpu.make_async_copy(
+                val_ref.at[pl.ds(g * tb, tb)], vbuf.at[slot], vsem.at[slot]
+            )
 
-        fin = (op == OP_FINAL)[:, None]
-        pv = jnp.where((op == OP_EDGE)[:, None], pv + v * jnp.take(x, si, axis=0), pv)
-        outv = (jnp.take(b, si, axis=0) - pv) * v
-        widx = jnp.where(op == OP_FINAL, oi, x.shape[0] - 1)  # dummy tail row
-        x = x.at[widx].set(jnp.where(fin, outv, jnp.take(x, widx, axis=0)))
-        return x, pv, rf
+        # warm-up: block 0 in flight before the block loop starts
+        instr_dma(0, 0).start()
+        val_dma(0, 0).start()
 
-    x, fb, rf = jax.lax.fori_loop(
-        0, cycles_per_block, cycle, (x_ref[...], fb_ref[...], rf_ref[...])
-    )
-    x_ref[...] = x
-    fb_ref[...] = fb
-    rf_ref[...] = rf
+        def run_block(g, carry):
+            slot = jax.lax.rem(g, 2)
+            nxt = jax.lax.rem(g + 1, 2)
 
-    @pl.when(g == num_blocks - 1)
-    def _emit():
+            # prefetch block g+1 into the other buffer while g executes
+            @pl.when(g + 1 < num_blocks)
+            def _prefetch():
+                instr_dma(nxt, g + 1).start()
+                val_dma(nxt, g + 1).start()
+
+            instr_dma(slot, g).wait()
+            val_dma(slot, g).wait()
+            instrs = ibuf[slot]     # [tb, N_FIELDS, P]
+            vals = vbuf[slot]       # [tb, P]
+
+            def cycle(t, c):
+                x, fb, rf = c
+                op = instrs[t, F_OP]
+                si = instrs[t, F_SRC]
+                oi = instrs[t, F_OUT]
+                ct = instrs[t, F_CTL][:, None]
+                sl = instrs[t, F_SLT]
+                v = vals[t][:, None]            # [P, 1] broadcast over batch
+
+                pv = fb
+                slot_val = rf[lanes, sl]        # [P, B]
+                pv = jnp.where(ct == PS_RESET, 0.0, pv)
+                pv = jnp.where(ct == PS_LOAD, slot_val, pv)
+                store_val = jnp.where(
+                    (ct == PS_STORE_RESET) | (ct == PS_SWAP), fb, slot_val
+                )
+                rf = rf.at[lanes, sl].set(store_val)
+                pv = jnp.where(ct == PS_STORE_RESET, 0.0, pv)
+                pv = jnp.where(ct == PS_SWAP, slot_val, pv)
+
+                fin = (op == OP_FINAL)[:, None]
+                pv = jnp.where(
+                    (op == OP_EDGE)[:, None], pv + v * jnp.take(x, si, axis=0), pv
+                )
+                outv = (jnp.take(b, si, axis=0) - pv) * v
+                widx = jnp.where(op == OP_FINAL, oi, n_pad - 1)  # dummy tail row
+                x = x.at[widx].set(jnp.where(fin, outv, jnp.take(x, widx, axis=0)))
+                return x, pv, rf
+
+            return jax.lax.fori_loop(0, tb, cycle, carry)
+
+        x0 = jnp.zeros((n_pad, nb), jnp.float32)
+        fb0 = jnp.zeros((p, nb), jnp.float32)
+        rf0 = jnp.zeros((p, num_slots, nb), jnp.float32)
+        x, _, _ = jax.lax.fori_loop(0, num_blocks, run_block, (x0, fb0, rf0))
         x_out_ref[...] = x
+
+    pl.run_scoped(
+        body,
+        ibuf=pltpu.VMEM((2, tb, N_FIELDS, p), jnp.int32),
+        vbuf=pltpu.VMEM((2, tb, p), jnp.float32),
+        isem=pltpu.SemaphoreType.DMA((2,)),
+        vsem=pltpu.SemaphoreType.DMA((2,)),
+    )
 
 
 @functools.partial(
@@ -122,41 +158,35 @@ def _kernel(
     static_argnames=("cycles_per_block", "num_slots", "interpret"),
 )
 def sptrsv_pallas(
-    opcode: jnp.ndarray,   # [T, P] int32 (T padded to a block multiple)
-    values: jnp.ndarray,   # [T, P] f32
-    src_idx: jnp.ndarray,  # [T, P] int32
-    out_idx: jnp.ndarray,  # [T, P] int32
-    ctrl: jnp.ndarray,     # [T, P] int32
-    slot: jnp.ndarray,     # [T, P] int32
+    instr: jnp.ndarray,    # [T, N_FIELDS, P] int32 (T padded to block multiple)
+    values: jnp.ndarray,   # [T, P] f32 (pre-gathered stream values)
     b: jnp.ndarray,        # [n_pad, B] f32 (n + 1 dummy tail row)
     *,
     cycles_per_block: int = 128,
     num_slots: int = 12,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    if interpret is None:
-        interpret = default_interpret()
-    t, p = opcode.shape
+    interpret = resolve_interpret(interpret)
+    t, nf, p = instr.shape
+    assert nf == N_FIELDS, f"expected {N_FIELDS} instruction fields, got {nf}"
     assert t % cycles_per_block == 0, "pad the instruction stream first"
     num_blocks = t // cycles_per_block
     n_pad, nb = b.shape
 
-    instr_spec = pl.BlockSpec((cycles_per_block, p), lambda g: (g, 0))
-    full_spec = pl.BlockSpec((n_pad, nb), lambda g: (0, 0))
-
     kernel = functools.partial(
-        _kernel, cycles_per_block=cycles_per_block, num_blocks=num_blocks
+        _kernel,
+        cycles_per_block=cycles_per_block,
+        num_blocks=num_blocks,
+        num_slots=num_slots,
     )
     return pl.pallas_call(
         kernel,
-        grid=(num_blocks,),
-        in_specs=[instr_spec] * 6 + [full_spec],
-        out_specs=full_spec,
-        out_shape=jax.ShapeDtypeStruct((n_pad, nb), jnp.float32),
-        scratch_shapes=[
-            pltpu.VMEM((n_pad, nb), jnp.float32),
-            pltpu.VMEM((p, nb), jnp.float32),
-            pltpu.VMEM((p, num_slots, nb), jnp.float32),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),   # instr stays in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),   # values stay in HBM
+            pl.BlockSpec(memory_space=pltpu.VMEM),  # b loaded once
         ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((n_pad, nb), jnp.float32),
         interpret=interpret,
-    )(opcode, values, src_idx, out_idx, ctrl, slot, b)
+    )(instr, values, b)

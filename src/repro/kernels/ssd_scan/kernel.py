@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import resolve_interpret
+
 __all__ = ["chunked_scan_pallas"]
 
 
@@ -100,8 +102,9 @@ def chunked_scan_pallas(
     *,
     chunk: int = 64,
     inclusive: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    interpret = resolve_interpret(interpret)
     bh, seq, kdim = q.shape
     vdim = v.shape[-1]
     assert seq % chunk == 0, "pad sequence to a chunk multiple"

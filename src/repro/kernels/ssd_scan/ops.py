@@ -75,7 +75,7 @@ def linear_recurrence(
     chunk: int = 64,
     inclusive: bool = True,
     use_pallas: bool = False,
-    interpret: bool = True,
+    interpret: bool | None = None,
     flags=None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     b, seq, h, kdim = q.shape

@@ -41,7 +41,9 @@ class RuntimeFlags:
     """Execution-path switches threaded through every model."""
 
     use_pallas: bool = False      # pallas kernels (TPU prod / interpret tests)
-    interpret: bool = True        # pallas interpret mode (CPU validation)
+    # None = auto: native compile on TPU, interpreter elsewhere
+    # (kernels.common.default_interpret — same convention as every kernel)
+    interpret: bool | None = None
     remat: bool = True            # activation checkpointing per layer
     attn_block_q: int = 512       # flash attention tiles
     # 4096 is the measured memory-term balance for the 32k prefill cells

@@ -310,7 +310,7 @@ def train_forward(
     nll = (lse - gold).mean()
     loss = nll + 0.01 * aux
     return loss, {"nll": nll, "aux": aux,
-                  "ppl": jnp.exp(jnp.clip(nll, a_max=20.0))}
+                  "ppl": jnp.exp(jnp.clip(nll, max=20.0))}
 
 
 def prefill(

@@ -159,9 +159,11 @@ def _moe_shard_map(fl, xrep, eid, slot_t, keep, wts, w1, w2, w3, cap, kind,
         args.append(jnp.zeros((e, 0, 0), xrep.dtype))
         specs.append(P("model", None, None))
 
-    fn = jax.shard_map(
+    from jax.experimental.shard_map import shard_map
+
+    fn = shard_map(
         lambda *a: body(*a[:7], a[7] if w3 is not None else None),
         mesh=mesh, in_specs=tuple(specs), out_specs=P(dp, None, None),
-        check_vma=False,
+        check_rep=False,
     )
     return fn(*args)

@@ -87,6 +87,34 @@ def test_executor_cache_no_retrace(prog):
     )
 
 
+# regression: SplitResult.expand_rhs used to allocate a 1-D buffer and
+# crash on [n, B] input ("shape mismatch ... could not be broadcast")
+@pytest.mark.parametrize("impl", ["numpy", "jax", "pallas"])
+def test_batched_solve_split_matches_reference(impl):
+    mat = generate("hub_small")
+    sprog, split = api.compile_split(mat, max_indegree=48)
+    B = 4
+    bmat = np.random.default_rng(7).standard_normal((mat.n, B))
+    got = split.extract(_solve_batched(sprog, split.expand_rhs(bmat), impl))
+    assert got.shape == (mat.n, B)
+    ref = np.stack(
+        [api.reference_solve(mat, bmat[:, i]) for i in range(B)], axis=1
+    )
+    np.testing.assert_allclose(got, ref, rtol=5e-4, atol=5e-4)
+
+
+def test_solve_split_accepts_batched_rhs():
+    """api.solve_split with b[n, B] — the exact ISSUE crash repro."""
+    mat = generate("hub_small")
+    sprog, split = api.compile_split(mat, max_indegree=48)
+    bmat = np.random.default_rng(8).standard_normal((mat.n, 3))
+    got = api.solve_split(sprog, split, bmat)  # crashed before the fix
+    assert got.shape == (mat.n, 3)
+    b1 = api.solve_split(sprog, split, bmat[:, 0])
+    assert b1.shape == (mat.n,)
+    np.testing.assert_allclose(got[:, 0], b1, rtol=1e-5, atol=1e-6)
+
+
 def test_make_solver_shares_cache(prog):
     s = api.make_solver(prog, batch=4)
     rng = np.random.default_rng(6)
