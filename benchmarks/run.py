@@ -15,6 +15,7 @@ import time
 from . import (
     batched_rhs,
     compiler_scaling,
+    large_n,
     node_splitting,
     dataflow_comparison,
     icr_ablation,
@@ -36,6 +37,7 @@ MODULES = {
     "beyond": node_splitting,
     "batched": batched_rhs,
     "sharded": sharded_batch,
+    "large_n": large_n,
 }
 
 

@@ -1,0 +1,91 @@
+#!/usr/bin/env python
+"""Docs cross-reference check: source citations must resolve to real text.
+
+Source files cite design documentation by section anchor (``DESIGN.md``
+followed by one or more ``§``-tokens, e.g. ``§5`` or ``§1/§3``) and point
+readers at ``README.md`` / ``docs/benchmarks.md``. This check fails when
+
+  * a cited section anchor has no matching ``## §... — ...`` heading,
+  * a cited markdown file (DESIGN.md, README.md, docs/*.md) is missing,
+
+so the documentation cannot silently rot out from under the code. Runs
+standalone (``python scripts/check_docs.py``) and as a tier-1 test
+(`tests/test_docs.py`).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+# directories whose sources may cite the docs
+SOURCE_DIRS = ("src", "tests", "benchmarks", "examples", "scripts")
+# markdown files sources are allowed to point at, by bare name
+DOC_FILES = {
+    "DESIGN.md": REPO / "DESIGN.md",
+    "README.md": REPO / "README.md",
+    "benchmarks.md": REPO / "docs" / "benchmarks.md",
+}
+
+# "DESIGN.md §1", "DESIGN.md §1/§3", "DESIGN.md §Perf head-folding"
+_REF_RE = re.compile(r"DESIGN\.md\s+((?:§[A-Za-z0-9]+)(?:/§[A-Za-z0-9]+)*)")
+_HEAD_RE = re.compile(r"^#{1,6}\s+§([A-Za-z0-9]+)\b", re.MULTILINE)
+_FILE_RE = re.compile(r"\b(DESIGN\.md|README\.md|benchmarks\.md)\b")
+
+
+def design_headings() -> set[str]:
+    path = DOC_FILES["DESIGN.md"]
+    if not path.exists():
+        return set()
+    return set(_HEAD_RE.findall(path.read_text()))
+
+
+def iter_sources():
+    for d in SOURCE_DIRS:
+        root = REPO / d
+        if root.is_dir():
+            yield from sorted(root.rglob("*.py"))
+
+
+def check() -> list[str]:
+    """Return a list of human-readable problems (empty == clean)."""
+    problems: list[str] = []
+    headings = design_headings()
+    if not headings:
+        problems.append("DESIGN.md missing or has no '## §X' headings")
+    for path in iter_sources():
+        rel = path.relative_to(REPO)
+        text = path.read_text()
+        for m in _FILE_RE.finditer(text):
+            if not DOC_FILES[m.group(1)].exists():
+                problems.append(f"{rel}: cites {m.group(1)}, file missing")
+                break  # one report per file per missing doc is enough
+        for m in _REF_RE.finditer(text):
+            for sec in m.group(1).replace("/", " ").split():
+                tok = sec.lstrip("§")
+                if tok not in headings:
+                    line = text.count("\n", 0, m.start()) + 1
+                    problems.append(
+                        f"{rel}:{line}: cites DESIGN.md §{tok}, no such "
+                        f"heading (have: {', '.join(sorted(headings))})"
+                    )
+    return problems
+
+
+def main() -> int:
+    problems = check()
+    for p in problems:
+        print(f"check_docs: {p}", file=sys.stderr)
+    if problems:
+        print(f"check_docs: {len(problems)} stale cross-reference(s)",
+              file=sys.stderr)
+        return 1
+    n_refs = sum(len(_REF_RE.findall(p.read_text())) for p in iter_sources())
+    print(f"check_docs: OK ({n_refs} DESIGN.md section references resolve)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -28,7 +28,14 @@ import numpy as np
 from . import matrices
 from .csr import TriCSR, random_rhs, serial_solve
 from .dag import DagInfo, analyze
-from .executor import as_batch, execute_jax, execute_numpy, make_jax_executor
+from .executor import (
+    as_batch,
+    execute_jax,
+    execute_numpy,
+    make_jax_executor,
+    make_pallas_executor,
+    validate_backend,
+)
 from .fine import FineConfig, FineStats, schedule_fine
 from .program import AccelConfig, Program
 from .schedule import compile_program
@@ -66,7 +73,8 @@ def solve(prog: Program, b: np.ndarray) -> np.ndarray:
     return execute_jax(prog, b)
 
 
-def solve_batch(prog: Program, b_matrix: np.ndarray, mesh=None) -> np.ndarray:
+def solve_batch(prog: Program, b_matrix: np.ndarray, mesh=None,
+                backend: str = "jax", **backend_opts) -> np.ndarray:
     """Solve Lx=b for every column of ``b_matrix`` (shape ``[n, B]``).
 
     One pass over the compiled instruction stream solves all B right-hand
@@ -79,16 +87,22 @@ def solve_batch(prog: Program, b_matrix: np.ndarray, mesh=None) -> np.ndarray:
     the instruction stream is replicated and each device solves its own
     column block (`repro.core.shard.make_sharded_solver`), cached per
     (program, padded per-device width, mesh).
-    """
-    bmat, _ = as_batch(b_matrix)
-    if mesh is not None:
-        from .shard import make_sharded_solver
 
-        return np.asarray(make_sharded_solver(prog, bmat.shape[1], mesh)(bmat))
+    ``backend="pallas"`` solves through the TPU kernel (see `make_solver`
+    for the placement knobs, including the HBM-resident row-blocked
+    large-n path).
+    """
+    validate_backend(backend, backend_opts)
+    bmat, _ = as_batch(b_matrix)
+    if mesh is not None or backend != "jax":
+        solver = make_solver(prog, batch=bmat.shape[1], mesh=mesh,
+                             backend=backend, **backend_opts)
+        return np.asarray(solver(bmat))
     return execute_jax(prog, bmat)
 
 
-def make_solver(prog: Program, batch: int | None = None, mesh=None):
+def make_solver(prog: Program, batch: int | None = None, mesh=None,
+                backend: str = "jax", **backend_opts):
     """Return a cached jitted solve closure for `prog`.
 
     * ``batch=None`` — `solver(b[n]) -> x[n]`;
@@ -97,16 +111,29 @@ def make_solver(prog: Program, batch: int | None = None, mesh=None):
       devices of `jax.sharding.Mesh` ``m`` (instruction stream replicated,
       no collectives; see `repro.core.shard`).
 
+    ``backend="pallas"`` executes through the TPU kernel instead of the
+    `lax.scan` program; extra keywords are the kernel knobs
+    (``cycles_per_block``, ``placement`` in {"auto", "resident",
+    "blocked"}, ``vmem_limit_bytes``, ``x_block_rows``, ``interpret`` —
+    see `executor.make_pallas_executor`).  The ``placement="blocked"`` /
+    auto-over-threshold regime keeps x and b HBM-resident with a sliding
+    VMEM row window, lifting the VMEM cap on solvable n (DESIGN.md §1).
+
     The closure reuses the per-program executor cache: building it twice
     (or solving repeatedly) costs one trace total per padded batch width —
-    per (padded per-device width, mesh) on the sharded path.
+    per (padded per-device width, mesh) on the sharded path, per (padded
+    width + placement knobs) on the pallas backend.
     """
+    validate_backend(backend, backend_opts)
     if mesh is not None:
         if batch is None:
             raise ValueError("mesh= requires an explicit batch size")
         from .shard import make_sharded_solver
 
-        return make_sharded_solver(prog, batch, mesh)
+        return make_sharded_solver(prog, batch, mesh, backend=backend,
+                                   **backend_opts)
+    if backend == "pallas":
+        return make_pallas_executor(prog, batch=batch, **backend_opts)
     return make_jax_executor(prog, batch=batch)
 
 
@@ -153,16 +180,19 @@ def compile_split(mat: TriCSR, cfg: AccelConfig | None = None,
     return compile_program(split.mat, cfg), split
 
 
-def solve_split(prog: Program, split, b: np.ndarray, mesh=None) -> np.ndarray:
+def solve_split(prog: Program, split, b: np.ndarray, mesh=None,
+                backend: str = "jax", **backend_opts) -> np.ndarray:
     """Solve through a node-splitting transform; ``b`` is ``[n]`` or ``[n, B]``.
 
     `SplitResult.expand_rhs` / `extract` preserve a trailing batch axis, so
-    node splitting composes with the batched executors and — via ``mesh=``
-    — with the multi-device sharded path.
+    node splitting composes with the batched executors, with the
+    multi-device sharded path (``mesh=``), and with the Pallas kernel's
+    placements (``backend="pallas"`` + `make_solver` knobs, including the
+    row-blocked large-n regime).
     """
     eb = split.expand_rhs(np.asarray(b))
-    if mesh is not None:
-        x = solve_batch(prog, eb, mesh=mesh)
+    if mesh is not None or backend != "jax":
+        x = solve_batch(prog, eb, mesh=mesh, backend=backend, **backend_opts)
         return split.extract(x[:, 0] if eb.ndim == 1 else x)
     return split.extract(execute_jax(prog, eb))
 

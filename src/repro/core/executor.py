@@ -5,8 +5,11 @@ Three implementations of identical semantics:
                        (debug oracle);
   * `execute_jax`    — `jax.lax.scan` over cycles, fully vectorized over CUs
                        and right-hand sides (the production CPU/TPU path);
-  * the Pallas kernel in `repro.kernels.sptrsv` (VMEM-resident register
-    files, double-buffered async-DMA instruction streaming).
+  * the Pallas kernel in `repro.kernels.sptrsv` (`make_pallas_executor`):
+    VMEM-resident register files, double-buffered async-DMA instruction
+    streaming, and — for n too large for VMEM residency — the HBM-resident
+    row-blocked x/b placement with level-boundary window streaming
+    (DESIGN.md §1).
 
 Per-cycle semantics (see program.py): the psum control is applied first
 (it configures the S1/S2 muxes and psum register file of Fig. 4b), then the
@@ -63,8 +66,10 @@ __all__ = [
     "execute_numpy",
     "execute_jax",
     "make_jax_executor",
+    "make_pallas_executor",
     "pad_batch",
     "trace_count",
+    "validate_backend",
 ]
 
 BATCH_PAD = 8  # batch widths are padded to a multiple of this (lane-friendly)
@@ -299,6 +304,76 @@ def make_jax_executor(prog: Program, batch: int | None = None):
     width = pad_batch(batch)
     core = _cached_executor(prog, width)
     return batched_entry(core, prog.n, batch, width, single_core=width == 1)
+
+
+def validate_backend(backend: str, backend_opts: dict) -> None:
+    """Shared backend-argument check for api/shard solver entry points."""
+    if backend not in ("jax", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if backend == "jax" and backend_opts:
+        raise TypeError(f"backend='jax' takes no extra options, "
+                        f"got {sorted(backend_opts)}")
+
+
+def make_pallas_executor(
+    prog: Program,
+    batch: int | None = None,
+    *,
+    cycles_per_block: int = 128,
+    placement: str = "auto",
+    vmem_limit_bytes: int | None = None,
+    x_block_rows: int | None = None,
+    interpret: bool | None = None,
+):
+    """Build (or fetch from cache) a Pallas-kernel solve closure for `prog`.
+
+    Same calling convention as `make_jax_executor` (``batch=None`` ->
+    ``solve(b[n]) -> x[n]``; ``batch=B`` -> ``solve(b[n, B]) -> x[n, B]``)
+    but executing `repro.kernels.sptrsv` instead of the `lax.scan` program.
+
+    ``placement`` selects the kernel's memory regime: ``"resident"`` keeps
+    x and b VMEM-resident, ``"blocked"`` forces the HBM-resident row-window
+    path (large n), ``"auto"`` switches on the x+b footprint crossing
+    ``vmem_limit_bytes`` (see `repro.kernels.sptrsv.ops.resolve_placement`).
+    Executors are cached per (program identity, padded batch width, all
+    placement knobs, interpret) — the window plan and the staged
+    instruction tensors are computed once per cache entry, so repeated
+    solves never re-stage or retrace.
+    """
+    from repro.kernels.sptrsv import ops as sptrsv_ops  # lazy: ops imports us
+
+    if vmem_limit_bytes is None:
+        vmem_limit_bytes = sptrsv_ops.DEFAULT_STATE_BYTES
+    width = pad_batch(batch if batch is not None else 1)
+    key = ("pallas", width, cycles_per_block, placement, vmem_limit_bytes,
+           x_block_rows, interpret)
+    per_prog = _EXEC_CACHE.get(prog)
+    if per_prog is None:
+        per_prog = {}
+        _EXEC_CACHE[prog] = per_prog
+    core = per_prog.get(key)
+    if core is None:
+        core = sptrsv_ops.build_solver_cols(
+            prog, width, cycles_per_block=cycles_per_block,
+            placement=placement, vmem_limit_bytes=vmem_limit_bytes,
+            x_block_rows=x_block_rows, interpret=interpret,
+        )
+        per_prog[key] = core
+    n = prog.n
+    if batch is None:
+        def solve_one(b):
+            b = jnp.asarray(b, jnp.float32)
+            if b.shape != (n,):
+                raise ValueError(f"expected b of shape {(n,)}, got {b.shape}")
+            return core(b[:, None])[:, 0]
+
+        solve_one.placement = core.placement
+        solve_one.plan = core.plan
+        return solve_one
+    entry = batched_entry(core, n, batch, width)
+    entry.placement = core.placement
+    entry.plan = core.plan
+    return entry
 
 
 def execute_jax(prog: Program, b: np.ndarray) -> np.ndarray:

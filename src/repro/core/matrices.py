@@ -183,6 +183,9 @@ def _build_suite() -> None:
     _reg("band_cz", lambda: banded(628, 24, 0.6, 6, "band_cz"))
     _reg("band_wide4k", lambda: banded(4096, 40, 0.35, 7, "band_wide4k"))
     _reg("band_big16k", lambda: banded(16384, 24, 0.4, 8, "band_big16k"))
+    # toward the 85k upper end of the paper's sweep — the row-blocked
+    # HBM-resident Pallas placement's target regime (DESIGN.md §1)
+    _reg("band_huge64k", lambda: banded(65536, 16, 0.35, 9, "band_huge64k"))
     # circuit archetypes (add20, add32, rajat04, rajat19, fpga_*, circuit204)
     _reg("ckt_add20", lambda: circuit(2395, 24, 3.1, 11, "ckt_add20"))
     _reg("ckt_add32", lambda: circuit(4960, 20, 1.9, 12, "ckt_add32"))

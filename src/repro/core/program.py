@@ -135,6 +135,14 @@ class Program:
     stream: np.ndarray     # [S] float32: L_ij / 1/L_ii in schedule order
     stats: ScheduleStats
     num_slots: int = 0     # executor psum RF size (psum_words + overflow used)
+    # Per-cycle solution-row access ranges (DESIGN.md §1, row-blocked x):
+    # row_lo[t]/row_hi[t] = min/max row index touched by any active lane in
+    # cycle t (EDGE reads x[src]; FINAL reads b[row] and writes x[row]).
+    # Cycles with no active lane carry the empty sentinel (n, -1).  The
+    # Pallas wrapper reduces these to per-cycle-block VMEM window bounds
+    # that drive the level-boundary flush/refill DMAs.
+    row_lo: np.ndarray | None = None  # [T] int32
+    row_hi: np.ndarray | None = None  # [T] int32
 
     @property
     def cycles(self) -> int:

@@ -20,7 +20,7 @@ the numpy / JAX / Pallas executors run verbatim; the schedule length is the
 hardware cycle count (the paper's compiler "can fully predict the behavior
 of the hardware", §III-B — we lean on exactly that property for timing).
 
-Deviations from the paper (documented in DESIGN.md §5):
+Deviations from the paper (DESIGN.md §5 "Deviations from the paper"):
   * bank assignment is online least-used-first-fit instead of offline greedy
     graph coloring — same mechanism, conservative (never fewer conflicts);
   * ICR examines a per-CU window of ready edges (default 16);
@@ -216,6 +216,8 @@ def compile_program(mat: TriCSR, cfg: AccelConfig | None = None) -> Program:
             startable[c][cus[c].pos_of[nd.nid]] = nd.nid
 
     ops_t, val_t, src_t, out_t, pct_t, psl_t = [], [], [], [], [], []
+    rlo_t: list[int] = []  # per-cycle min/max solution row touched
+    rhi_t: list[int] = []  # (row-blocked executor metadata, DESIGN.md §1)
     stream: list[float] = []
     stats = ScheduleStats(name=mat.name, n=n, nnz=mat.nnz, cycles=0,
                           exec_edges=0, exec_finals=0)
@@ -308,7 +310,7 @@ def compile_program(mat: TriCSR, cfg: AccelConfig | None = None) -> Program:
                     need = 1 if first_new else 2
                     if len(cu.free_slots) < need:
                         if stall_streak >= 2:
-                            # emergency psum spill (DESIGN.md §5 / docstring)
+                            # emergency psum overflow park (DESIGN.md §5)
                             ctrl, slot = PS_STORE_RESET, cu.peek_over_slot()
                             stats.dm_escapes += 1
                             kind = "edge" if nd.ready else "final"
@@ -481,6 +483,17 @@ def compile_program(mat: TriCSR, cfg: AccelConfig | None = None) -> Program:
         out_t.append(out_row)
         pct_t.append(pct_row)
         psl_t.append(psl_row)
+        # Solution rows touched this cycle: EDGE lanes read x[src], FINAL
+        # lanes read b[src] and write x[out] (out == src for finals).  The
+        # per-cycle [lo, hi] envelope is what the row-blocked Pallas path
+        # needs to place its VMEM window (empty cycle -> sentinel (n, -1)).
+        touched = src_row[op_row != 0]
+        if touched.size:
+            rlo_t.append(int(touched.min()))
+            rhi_t.append(int(touched.max()))
+        else:
+            rlo_t.append(n)
+            rhi_t.append(-1)
         cycle += 1
 
     stats.cycles = cycle
@@ -500,4 +513,6 @@ def compile_program(mat: TriCSR, cfg: AccelConfig | None = None) -> Program:
         psum_slot=np.stack(psl_t),
         stream=np.array(stream, dtype=np.float32),
         stats=stats,
+        row_lo=np.array(rlo_t, dtype=np.int32),
+        row_hi=np.array(rhi_t, dtype=np.int32),
     )

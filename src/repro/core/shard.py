@@ -39,7 +39,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed.sharding import rhs_sharding
 
-from .executor import batched_entry, build_solve_cols, pad_batch
+from .executor import batched_entry, build_solve_cols, pad_batch, validate_backend
 from .program import Program
 
 __all__ = ["batch_mesh", "make_sharded_solver", "sharded_widths"]
@@ -67,43 +67,67 @@ def sharded_widths(batch: int, mesh: Mesh) -> tuple[int, int]:
     return w_local, w_local * ndev
 
 
-def _build_sharded_executor(prog: Program, w_local: int, mesh: Mesh):
+def _build_sharded_executor(prog: Program, w_local: int, mesh: Mesh,
+                            backend: str, backend_opts: dict):
     """Jitted `solve(b[n, w_local * ndev]) -> x` mapped over the mesh.
 
-    Each device traces `executor.build_solve_cols` once at the per-device
-    width; the instruction constants fold into the (replicated) jaxpr.
+    Each device traces the per-device solver once at the per-device width.
+    ``backend="jax"`` maps `executor.build_solve_cols` (instruction
+    constants fold into the replicated jaxpr); ``backend="pallas"`` maps
+    `repro.kernels.sptrsv.ops.build_solver_cols`, so the kernel's memory
+    placements — including the HBM-resident row-blocked large-n regime —
+    compose with mesh sharding.  `shard_map` has no replication rule for
+    `pallas_call`, so the pallas path disables the static replication
+    check; that is sound here because in/out specs are fully sharded over
+    the batch axis and the solve never communicates across devices.
     """
-    solve_local = build_solve_cols(prog, w_local)
+    if backend == "pallas":
+        from repro.kernels.sptrsv import ops as sptrsv_ops
+
+        solve_local = sptrsv_ops.build_solver_cols(prog, w_local,
+                                                   **backend_opts)
+        check = {"check_rep": False}
+    else:
+        solve_local = build_solve_cols(prog, w_local)
+        check = {}
     spec = P(None, mesh.axis_names)
     return jax.jit(
-        shard_map(solve_local, mesh=mesh, in_specs=(spec,), out_specs=spec)
+        shard_map(solve_local, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                  **check)
     )
 
 
-def _cached_sharded_executor(prog: Program, w_local: int, mesh: Mesh):
+def _cached_sharded_executor(prog: Program, w_local: int, mesh: Mesh,
+                             backend: str, backend_opts: dict):
     per_prog = _SHARD_CACHE.get(prog)
     if per_prog is None:
         per_prog = {}
         _SHARD_CACHE[prog] = per_prog
-    key = (w_local, mesh)
+    key = (w_local, mesh, backend, tuple(sorted(backend_opts.items())))
     fn = per_prog.get(key)
     if fn is None:
-        fn = _build_sharded_executor(prog, w_local, mesh)
+        fn = _build_sharded_executor(prog, w_local, mesh, backend,
+                                     backend_opts)
         per_prog[key] = fn
     return fn
 
 
-def make_sharded_solver(prog: Program, batch: int, mesh: Mesh):
+def make_sharded_solver(prog: Program, batch: int, mesh: Mesh,
+                        backend: str = "jax", **backend_opts):
     """Cached `solver(b[n, batch]) -> x[n, batch]` sharded over ``mesh``.
 
     Pads the batch axis to ``ndev * pad_batch(ceil(batch / ndev))``, places
     the columns with `rhs_sharding`, and runs the per-device executor under
-    `shard_map`.  Reuses one trace per (program, per-device width, mesh).
+    `shard_map`.  Reuses one trace per (program, per-device width, mesh,
+    backend knobs).  ``backend="pallas"`` runs the TPU kernel per device
+    (knobs as in `executor.make_pallas_executor`).
     """
     if batch < 0:
         raise ValueError(f"batch must be non-negative, got {batch}")
+    validate_backend(backend, backend_opts)
     w_local, width = sharded_widths(max(batch, 1), mesh)
-    core = _cached_sharded_executor(prog, w_local, mesh)
+    core = _cached_sharded_executor(prog, w_local, mesh, backend,
+                                    backend_opts)
     placement = rhs_sharding(mesh)
     return batched_entry(core, prog.n, batch, width,
                          place=lambda b: jax.device_put(b, placement))

@@ -1,3 +1,16 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Custom Pallas TPU kernels for the paper's compute hot-spots.
+
+Three kernel families, each shipped as ``kernel.py`` (the Pallas kernel) +
+``ops.py`` (staging/jit wrapper) + ``ref.py`` (pure-jnp oracle):
+
+  * ``sptrsv``          — the accelerator's VLIW instruction-stream
+    executor (VMEM-resident and row-blocked HBM-resident placements,
+    DESIGN.md §1);
+  * ``ssd_scan``        — the medium-granularity chunked linear recurrence
+    (SSD / GLA / WKV) the sequence models run on;
+  * ``flash_attention`` — blocked GQA attention for the hybrid archs.
+
+`common.default_interpret` / `common.resolve_interpret` give every family
+the same interpret auto-detect: native compile on TPU, interpreter
+elsewhere.
+"""

@@ -29,6 +29,29 @@ Multi-RHS batching: the solve state carries a trailing batch axis
 instruction stream solves B right-hand sides — the instruction words
 broadcast over the batch axis, amortizing instruction traffic exactly as
 the VLIW program amortizes scheduling across CUs.
+
+Two memory-placement regimes for the solve state (DESIGN.md §1):
+
+  * `sptrsv_pallas` — x and b fully VMEM-resident.  Fastest while
+    `x[n_pad, B]` + `b[n_pad, B]` fit; caps solvable n well below the
+    paper's 85k-node DAGs on a real TPU.
+  * `sptrsv_pallas_blocked` — x and b stay HBM-resident (`pltpu.ANY`); the
+    kernel owns a row-blocked VMEM *window* of `window` solution rows that
+    slides forward by a fixed `stride` rows per cycle block.  At each block
+    boundary the `stride` rows that leave the window are flushed to HBM
+    (they are final — the schedule metadata proves no later block touches
+    them), the shared `window - stride` rows are carried across by a
+    VMEM-to-VMEM copy, and the `stride` rows that enter the window are
+    refilled from HBM by an async DMA issued one block early, overlapping
+    the *previous* block's compute.  This is the level-boundary streaming
+    of the solution vector: x rows retire monotonically as the schedule
+    sweeps the DAG levels, exactly the traffic/compute overlap multi-GPU
+    SpTRSV implementations use for large n.
+
+The feasibility conditions (every block's touched-row envelope inside its
+window; see `ops.plan_window`) are checked by the wrapper against the
+compiler-emitted per-cycle row ranges (`Program.row_lo/row_hi`), so the
+kernel itself stays branch-free and assert-free.
 """
 
 from __future__ import annotations
@@ -50,12 +73,54 @@ from repro.core.program import (
 )
 from repro.kernels.common import default_interpret, resolve_interpret
 
-__all__ = ["sptrsv_pallas", "default_interpret", "N_FIELDS",
-           "F_OP", "F_SRC", "F_OUT", "F_CTL", "F_SLT"]
+__all__ = ["sptrsv_pallas", "sptrsv_pallas_blocked", "default_interpret",
+           "N_FIELDS", "F_OP", "F_SRC", "F_OUT", "F_CTL", "F_SLT"]
 
 # int32 planes of the stacked instruction tensor [T, N_FIELDS, P]
 F_OP, F_SRC, F_OUT, F_CTL, F_SLT = range(5)
 N_FIELDS = 5
+
+
+def _exec_cycle(instrs, vals, t, xw, fb, rf, bw, lanes, base, win_rows,
+                dummy_row):
+    """One VLIW cycle over all lanes and RHS columns (shared by both
+    placements).
+
+    ``xw``/``bw`` hold solution/RHS rows ``[base, base + win_rows)`` (the
+    whole padded vector with ``base=0`` in the VMEM-resident kernel, the
+    sliding window in the blocked one); ``dummy_row`` absorbs the scatter
+    of non-FINAL lanes.  Instruction row indices are rebased and clipped —
+    active lanes are in-window by the wrapper's feasibility check, so the
+    clip only tames NOP lanes' zero indices.
+    """
+    op = instrs[t, F_OP]
+    si = instrs[t, F_SRC]
+    oi = instrs[t, F_OUT]
+    ct = instrs[t, F_CTL][:, None]
+    sl = instrs[t, F_SLT]
+    v = vals[t][:, None]                # [P, 1] broadcast over batch
+
+    pv = fb
+    slot_val = rf[lanes, sl]            # [P, B]
+    pv = jnp.where(ct == PS_RESET, 0.0, pv)
+    pv = jnp.where(ct == PS_LOAD, slot_val, pv)
+    store_val = jnp.where(
+        (ct == PS_STORE_RESET) | (ct == PS_SWAP), fb, slot_val
+    )
+    rf = rf.at[lanes, sl].set(store_val)
+    pv = jnp.where(ct == PS_STORE_RESET, 0.0, pv)
+    pv = jnp.where(ct == PS_SWAP, slot_val, pv)
+
+    si_l = jnp.clip(si - base, 0, win_rows - 1)
+    fin = (op == OP_FINAL)[:, None]
+    pv = jnp.where(
+        (op == OP_EDGE)[:, None], pv + v * jnp.take(xw, si_l, axis=0), pv
+    )
+    outv = (jnp.take(bw, si_l, axis=0) - pv) * v
+    widx = jnp.where(op == OP_FINAL,
+                     jnp.clip(oi - base, 0, win_rows - 1), dummy_row)
+    xw = xw.at[widx].set(jnp.where(fin, outv, jnp.take(xw, widx, axis=0)))
+    return xw, pv, rf
 
 
 def _kernel(
@@ -109,32 +174,9 @@ def _kernel(
 
             def cycle(t, c):
                 x, fb, rf = c
-                op = instrs[t, F_OP]
-                si = instrs[t, F_SRC]
-                oi = instrs[t, F_OUT]
-                ct = instrs[t, F_CTL][:, None]
-                sl = instrs[t, F_SLT]
-                v = vals[t][:, None]            # [P, 1] broadcast over batch
-
-                pv = fb
-                slot_val = rf[lanes, sl]        # [P, B]
-                pv = jnp.where(ct == PS_RESET, 0.0, pv)
-                pv = jnp.where(ct == PS_LOAD, slot_val, pv)
-                store_val = jnp.where(
-                    (ct == PS_STORE_RESET) | (ct == PS_SWAP), fb, slot_val
-                )
-                rf = rf.at[lanes, sl].set(store_val)
-                pv = jnp.where(ct == PS_STORE_RESET, 0.0, pv)
-                pv = jnp.where(ct == PS_SWAP, slot_val, pv)
-
-                fin = (op == OP_FINAL)[:, None]
-                pv = jnp.where(
-                    (op == OP_EDGE)[:, None], pv + v * jnp.take(x, si, axis=0), pv
-                )
-                outv = (jnp.take(b, si, axis=0) - pv) * v
-                widx = jnp.where(op == OP_FINAL, oi, n_pad - 1)  # dummy tail row
-                x = x.at[widx].set(jnp.where(fin, outv, jnp.take(x, widx, axis=0)))
-                return x, pv, rf
+                # base=0: absolute row indices; x[n_pad - 1] is the dummy row
+                return _exec_cycle(instrs, vals, t, x, fb, rf, b, lanes,
+                                   0, n_pad, n_pad - 1)
 
             return jax.lax.fori_loop(0, tb, cycle, carry)
 
@@ -188,5 +230,227 @@ def sptrsv_pallas(
         ],
         out_specs=pl.BlockSpec(memory_space=pltpu.VMEM),
         out_shape=jax.ShapeDtypeStruct((n_pad, nb), jnp.float32),
+        interpret=interpret,
+    )(instr, values, b)
+
+
+# ---------------------------------------------------------------------------
+# Row-blocked HBM-resident placement (large n)
+# ---------------------------------------------------------------------------
+def _blocked_kernel(
+    # inputs
+    instr_ref,   # [T, N_FIELDS, P] int32, HBM (streamed by DMA)
+    val_ref,     # [T, P]           f32,   HBM (pre-gathered values)
+    b_hbm_ref,   # [n_hbm, B]       f32,   HBM (windowed by DMA)
+    # outputs
+    x_hbm_ref,   # [n_hbm, B]       f32,   HBM (windowed by DMA)
+    *,
+    cycles_per_block: int,
+    num_blocks: int,
+    num_slots: int,
+    window: int,
+    stride: int,
+):
+    """x/b HBM-resident solve over a sliding VMEM row window.
+
+    Cycle block g executes against window rows ``[g*stride, g*stride +
+    window)`` of x and b held in VMEM.  Boundary g -> g+1 (all async DMA):
+
+      * flush  — rows ``[g*stride, (g+1)*stride)`` leave every later window;
+        the schedule's feasibility check proves no later block touches
+        them, so they are final and stream out to HBM;
+      * shift  — the ``window - stride`` shared rows are copied into the
+        other window buffer (VMEM -> VMEM, cheap);
+      * refill — the ``stride`` rows entering window g+1 stream in from
+        HBM.  The refill is issued at the TOP of block g, so it overlaps
+        block g's compute (those rows are beyond window g, hence untouched
+        by any flush up to and including boundary g — no hazard).
+
+    The instruction/value/b-window prefetch reuses the double-buffer
+    machinery of the VMEM-resident kernel.  Hazard ordering is enforced by
+    waiting the boundary shift before issuing the next refill into the same
+    buffer (the refill overwrites rows the shift read), and by keeping
+    flush/refill HBM ranges disjoint (``window >= 2*stride``, checked by
+    the wrapper).
+    """
+    tb = cycles_per_block
+    p = instr_ref.shape[-1]
+    nb = b_hbm_ref.shape[-1]
+    w, r = window, stride
+    lanes = jax.lax.iota(jnp.int32, p)
+
+    def body(ibuf, vbuf, xwin, bwin, isem, vsem, bsem, xrsem, xssem, xfsem):
+        # ibuf/vbuf: instruction double buffers (as in the resident kernel).
+        # xwin: [2, w + 1, nb] — two x windows (row w is the NOP dummy row).
+        # bwin: [2, w, nb]     — two b windows (read-only, full refetch).
+        def instr_dma(slot, g):
+            return pltpu.make_async_copy(
+                instr_ref.at[pl.ds(g * tb, tb)], ibuf.at[slot], isem.at[slot]
+            )
+
+        def val_dma(slot, g):
+            return pltpu.make_async_copy(
+                val_ref.at[pl.ds(g * tb, tb)], vbuf.at[slot], vsem.at[slot]
+            )
+
+        def b_dma(slot, g):
+            return pltpu.make_async_copy(
+                b_hbm_ref.at[pl.ds(g * r, w)], bwin.at[slot, pl.ds(0, w)],
+                bsem.at[slot],
+            )
+
+        def x_refill_dma(slot, g):
+            # rows entering window g: [g*r + w - r, g*r + w)
+            return pltpu.make_async_copy(
+                x_hbm_ref.at[pl.ds(g * r + (w - r), r)],
+                xwin.at[slot, pl.ds(w - r, r)],
+                xrsem.at[slot],
+            )
+
+        def x_shift_dma(src_slot, dst_slot):
+            # carry the shared rows of boundary g -> g+1 across buffers
+            return pltpu.make_async_copy(
+                xwin.at[src_slot, pl.ds(r, w - r)],
+                xwin.at[dst_slot, pl.ds(0, w - r)],
+                xssem,
+            )
+
+        def x_flush_dma(slot, g):
+            # retire rows [g*r, g*r + r) — final, never touched again
+            return pltpu.make_async_copy(
+                xwin.at[slot, pl.ds(0, r)], x_hbm_ref.at[pl.ds(g * r, r)],
+                xfsem,
+            )
+
+        # warm-up: block 0 inputs in flight before the block loop starts
+        instr_dma(0, 0).start()
+        val_dma(0, 0).start()
+        b_dma(0, 0).start()
+
+        def run_block(g, carry):
+            fb, rf = carry
+            slot = jax.lax.rem(g, 2)
+            nxt = jax.lax.rem(g + 1, 2)
+
+            # inputs for block g (prefetched during g-1; warm-up for g=0)
+            instr_dma(slot, g).wait()
+            val_dma(slot, g).wait()
+            b_dma(slot, g).wait()
+
+            @pl.when(g > 0)
+            def _assemble():
+                x_shift_dma(nxt, slot).wait()   # shared rows carried over
+                x_refill_dma(slot, g).wait()    # entering rows (issued @ g-1)
+                x_flush_dma(nxt, g - 1).wait()  # retired rows landed in HBM
+
+            # prefetch block g+1.  The x refill into xwin[nxt] may only
+            # start after the boundary shift read xwin[nxt] — guaranteed:
+            # _assemble waited on that shift just above.
+            @pl.when(g + 1 < num_blocks)
+            def _prefetch():
+                instr_dma(nxt, g + 1).start()
+                val_dma(nxt, g + 1).start()
+                b_dma(nxt, g + 1).start()
+                x_refill_dma(nxt, g + 1).start()
+
+            instrs = ibuf[slot]     # [tb, N_FIELDS, P]
+            vals = vbuf[slot]       # [tb, P]
+            xw = xwin[slot]         # [w + 1, B]; row w is the dummy row
+            bw = bwin[slot]         # [w, B]
+            base = g * r
+
+            def cycle(t, c):
+                x_, fb_, rf_ = c
+                return _exec_cycle(instrs, vals, t, x_, fb_, rf_, bw, lanes,
+                                   base, w, w)
+
+            xw, fb, rf = jax.lax.fori_loop(0, tb, cycle, (xw, fb, rf))
+            xwin[slot] = xw  # publish block-g writes for the boundary DMAs
+
+            @pl.when(g + 1 < num_blocks)
+            def _boundary():
+                x_flush_dma(slot, g).start()
+                x_shift_dma(slot, nxt).start()
+
+            return fb, rf
+
+        fb0 = jnp.zeros((p, nb), jnp.float32)
+        rf0 = jnp.zeros((p, num_slots, nb), jnp.float32)
+        jax.lax.fori_loop(0, num_blocks, run_block, (fb0, rf0))
+
+        # final window: every still-resident row flushed in one DMA
+        fin = pltpu.make_async_copy(
+            xwin.at[jax.lax.rem(num_blocks - 1, 2), pl.ds(0, w)],
+            x_hbm_ref.at[pl.ds((num_blocks - 1) * r, w)],
+            xfsem,
+        )
+        fin.start()
+        fin.wait()
+
+    pl.run_scoped(
+        body,
+        ibuf=pltpu.VMEM((2, tb, N_FIELDS, p), jnp.int32),
+        vbuf=pltpu.VMEM((2, tb, p), jnp.float32),
+        xwin=pltpu.VMEM((2, w + 1, nb), jnp.float32),
+        bwin=pltpu.VMEM((2, w, nb), jnp.float32),
+        isem=pltpu.SemaphoreType.DMA((2,)),
+        vsem=pltpu.SemaphoreType.DMA((2,)),
+        bsem=pltpu.SemaphoreType.DMA((2,)),
+        xrsem=pltpu.SemaphoreType.DMA((2,)),
+        xssem=pltpu.SemaphoreType.DMA,
+        xfsem=pltpu.SemaphoreType.DMA,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cycles_per_block", "num_slots", "window", "stride",
+                     "interpret"),
+)
+def sptrsv_pallas_blocked(
+    instr: jnp.ndarray,    # [T, N_FIELDS, P] int32 (T padded to block multiple)
+    values: jnp.ndarray,   # [T, P] f32 (pre-gathered stream values)
+    b: jnp.ndarray,        # [n_hbm, B] f32 (padded to the window sweep)
+    *,
+    window: int,
+    stride: int,
+    cycles_per_block: int = 128,
+    num_slots: int = 12,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Row-blocked HBM-resident solve (large n; see `ops.plan_window`).
+
+    ``b`` must be padded to ``n_hbm = (num_blocks - 1) * stride + window``
+    rows so every window position is in bounds; `ops.build_solver_cols`
+    does this and derives a feasible (window, stride) pair from the
+    program's row-range metadata.
+    """
+    interpret = resolve_interpret(interpret)
+    t, nf, p = instr.shape
+    assert nf == N_FIELDS, f"expected {N_FIELDS} instruction fields, got {nf}"
+    assert t % cycles_per_block == 0, "pad the instruction stream first"
+    num_blocks = t // cycles_per_block
+    n_hbm, nb = b.shape
+    assert stride >= 1 and window >= 2 * stride, (window, stride)
+    assert n_hbm == (num_blocks - 1) * stride + window, \
+        f"b rows {n_hbm} != window sweep {(num_blocks - 1) * stride + window}"
+
+    kernel = functools.partial(
+        _blocked_kernel,
+        cycles_per_block=cycles_per_block,
+        num_blocks=num_blocks,
+        num_slots=num_slots,
+        window=window,
+        stride=stride,
+    )
+    return pl.pallas_call(
+        kernel,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),   # instr stays in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),   # values stay in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),   # b stays in HBM
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),  # x stays in HBM
+        out_shape=jax.ShapeDtypeStruct((n_hbm, nb), jnp.float32),
         interpret=interpret,
     )(instr, values, b)

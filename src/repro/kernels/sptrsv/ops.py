@@ -1,18 +1,186 @@
-"""Jitted wrapper: run a compiled `Program` through the Pallas kernel."""
+"""Compiler-side wrapper: run a compiled `Program` through the Pallas kernel.
+
+Two memory placements for the solve state (DESIGN.md §1):
+
+  * ``resident`` — x and b live in VMEM for the whole solve
+    (`kernel.sptrsv_pallas`); fastest while ``2 * n_pad * B * 4`` bytes fit.
+  * ``blocked``  — x and b stay in HBM and the kernel slides a row-blocked
+    VMEM window over them (`kernel.sptrsv_pallas_blocked`), flushing and
+    refilling at cycle-block boundaries with async DMA overlapped against
+    compute.  This is the large-n path: VMEM use is bounded by the window,
+    not by n.
+
+``placement="auto"`` (the default) picks per solve: resident while the
+x+b footprint is under ``vmem_limit_bytes``, blocked beyond it whenever the
+program's row-access envelope admits a sliding window (`plan_window`).
+
+The wrapper performs the compiler-side data staging the hardware's stream
+memory provides: values are pre-gathered per instruction word so the kernel
+streams them sequentially (no positional indirection, as in the paper's
+stream-memory design), and the five int32 instruction planes are stacked
+into one ``[T, N_FIELDS, P]`` tensor so each cycle block arrives in VMEM
+with a single DMA.
+"""
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
-from repro.core.executor import as_batch, pad_batch
+from repro.core.executor import _psum_slots, as_batch
 from repro.core.program import Program
-from repro.core.schedule import PSUM_OVERFLOW_SLOTS
 
-from .kernel import F_CTL, F_OP, F_OUT, F_SLT, F_SRC, N_FIELDS, sptrsv_pallas
+from .kernel import (
+    F_CTL,
+    F_OP,
+    F_OUT,
+    F_SLT,
+    F_SRC,
+    N_FIELDS,
+    sptrsv_pallas,
+    sptrsv_pallas_blocked,
+)
 
-__all__ = ["solve"]
+__all__ = [
+    "solve",
+    "plan_window",
+    "resolve_placement",
+    "build_solver_cols",
+    "WindowPlan",
+    "DEFAULT_STATE_BYTES",
+]
+
+# auto-placement threshold for the VMEM x+b solve-state footprint.  Real
+# TPU cores have ~16 MiB of VMEM shared with the instruction double
+# buffers and the psum register file; 4 MiB of solve state is a
+# comfortable default and is overridable per call (``vmem_limit_bytes``).
+DEFAULT_STATE_BYTES = 4 << 20
+
+_ROW_ALIGN = 8  # window/stride row granularity (f32 sublane tile)
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowPlan:
+    """A feasible sliding-window placement for the blocked kernel.
+
+    Cycle block g executes against x/b rows ``[g*stride, g*stride +
+    window)``; ``n_hbm`` is the padded HBM row count covering the full
+    window sweep.  ``feasible=False`` carries a human-readable ``reason``
+    (the auto path then falls back to the VMEM-resident placement).
+    """
+
+    feasible: bool
+    stride: int = 0
+    window: int = 0
+    n_hbm: int = 0
+    num_blocks: int = 0
+    reason: str = ""
+
+    def state_bytes(self, nb: int) -> int:
+        """VMEM bytes for the double-buffered x+b windows."""
+        return (2 * (self.window + 1) + 2 * self.window) * nb * 4
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def plan_window(
+    prog: Program,
+    cycles_per_block: int = 128,
+    min_window: int | None = None,
+) -> WindowPlan:
+    """Derive a (stride, window) pair from the program's row-range metadata.
+
+    The compiler records, per cycle, the min/max solution row any active
+    lane touches (`Program.row_lo/row_hi`).  Reducing those over each cycle
+    block gives the block's touched-row envelope ``[lo_g, hi_g]``; the
+    window for block g is placed at base ``g * stride``, so feasibility
+    requires ``g*stride <= lo_g`` and ``hi_g < g*stride + window`` for all
+    g.  The stride is maximized (smallest window), then the window sized to
+    the worst block — both rounded to the f32 sublane granularity.
+
+    Programs whose row envelope does not advance monotonically enough
+    (e.g. circuit matrices with hub columns read across the whole DAG)
+    yield ``feasible=False``; such DAGs genuinely need the whole x vector
+    live and must use the resident placement.
+    """
+    if prog.row_lo is None or prog.row_hi is None:
+        return WindowPlan(False, reason="program has no row-range metadata "
+                                        "(recompile with this version)")
+    t = prog.cycles
+    g = -(-t // cycles_per_block)
+    lo = np.full(g * cycles_per_block, prog.n, dtype=np.int64)
+    hi = np.full(g * cycles_per_block, -1, dtype=np.int64)
+    lo[:t] = prog.row_lo
+    hi[:t] = prog.row_hi
+    lo = lo.reshape(g, cycles_per_block).min(axis=1)
+    hi = hi.reshape(g, cycles_per_block).max(axis=1)
+    nonempty = hi >= 0
+
+    stride = prog.n
+    for gi in range(1, g):
+        if nonempty[gi]:
+            stride = min(stride, int(lo[gi]) // gi)
+    stride -= stride % _ROW_ALIGN
+    if g > 1 and stride <= 0:
+        return WindowPlan(False, reason="row envelope not monotone: an "
+                                        "early row stays live across the "
+                                        "whole schedule")
+    if g == 1:
+        stride = _ROW_ALIGN  # unused by a single-block sweep, but traced
+
+    w_req = 0
+    for gi in range(g):
+        if nonempty[gi]:
+            w_req = max(w_req, int(hi[gi]) - gi * stride + 1)
+    window = max(w_req, 2 * stride, min_window or 0, 2 * _ROW_ALIGN)
+    window = _round_up(window, _ROW_ALIGN)
+    n_hbm = (g - 1) * stride + window
+    return WindowPlan(True, stride=stride, window=window, n_hbm=n_hbm,
+                      num_blocks=g)
+
+
+def resolve_placement(
+    prog: Program,
+    nb: int,
+    *,
+    placement: str = "auto",
+    vmem_limit_bytes: int | None = None,
+    cycles_per_block: int = 128,
+    x_block_rows: int | None = None,
+) -> tuple[str, WindowPlan | None]:
+    """Pick ``("resident", None)`` or ``("blocked", plan)`` for a solve.
+
+    ``placement`` forces a regime (``"blocked"`` raises if the program's
+    row envelope admits no window); ``"auto"`` compares the VMEM-resident
+    x+b footprint for ``nb`` RHS columns against ``vmem_limit_bytes``
+    (``None`` -> `DEFAULT_STATE_BYTES`) and only goes blocked when that
+    saves memory and a window exists.  ``x_block_rows`` floors the planned
+    window (perf knob; the planner still enlarges it to whatever the
+    schedule requires).
+    """
+    if vmem_limit_bytes is None:
+        vmem_limit_bytes = DEFAULT_STATE_BYTES
+    if placement == "resident":
+        return "resident", None
+    if placement not in ("auto", "blocked"):
+        raise ValueError(f"unknown placement {placement!r}")
+    plan = plan_window(prog, cycles_per_block, min_window=x_block_rows)
+    if placement == "blocked":
+        if not plan.feasible:
+            raise ValueError(f"row-blocked placement infeasible: {plan.reason}")
+        return "blocked", plan
+    resident_bytes = 2 * (prog.n + 1) * nb * 4
+    if resident_bytes <= vmem_limit_bytes or not plan.feasible:
+        return "resident", None
+    if plan.state_bytes(nb) >= resident_bytes:
+        return "resident", None  # window as big as the vector: no point
+    return "blocked", plan
 
 
 def _pad_to(arr: np.ndarray, t_pad: int, fill=0) -> np.ndarray:
@@ -24,59 +192,103 @@ def _pad_to(arr: np.ndarray, t_pad: int, fill=0) -> np.ndarray:
     return out
 
 
-def solve(
-    prog: Program,
-    b: np.ndarray,
-    *,
-    cycles_per_block: int = 128,
-    interpret: bool | None = None,
-) -> np.ndarray:
-    """Solve Lx=b by executing `prog` in the Pallas kernel.
-
-    ``b`` may be ``[n]`` (single RHS) or ``[n, B]`` (batched multi-RHS);
-    the result has the matching shape.  Batched solves stream the
-    instruction tensor once for all B columns; the batch axis is padded to
-    a lane-friendly width (`pad_batch`) so nearby widths share one compile.
-
-    ``interpret=None`` auto-detects: native compile on TPU, interpreter
-    elsewhere.
-
-    The wrapper performs the compiler-side data staging the hardware's
-    stream memory provides: values are pre-gathered per instruction word so
-    the kernel streams them sequentially (no positional indirection, as in
-    the paper's stream-memory design), and the five int32 instruction
-    planes are stacked into one ``[T, N_FIELDS, P]`` tensor so each cycle
-    block arrives in VMEM with a single DMA.
-    """
-    bmat, single = as_batch(b)
-    nb = bmat.shape[1]
-    nb_pad = pad_batch(nb)
-
+def _stage_instructions(prog: Program, cycles_per_block: int):
+    """Stack + pad the five instruction planes and pre-gather the values."""
     t, p = prog.opcode.shape
-    t_pad = -(-t // cycles_per_block) * cycles_per_block
-
+    t_pad = _round_up(t, cycles_per_block)
     values = prog.stream[prog.val_idx]          # [T, P] pre-gathered
     values = values * (prog.opcode != 0)        # NOP lanes -> 0.0
-    n_pad = prog.n + 1
-
     planes: list = [None] * N_FIELDS
     planes[F_OP] = _pad_to(prog.opcode.astype(np.int32), t_pad)
     planes[F_SRC] = _pad_to(prog.src_idx.astype(np.int32), t_pad)
     planes[F_OUT] = _pad_to(prog.out_idx.astype(np.int32), t_pad, fill=prog.n)
     planes[F_CTL] = _pad_to(prog.psum_ctrl.astype(np.int32), t_pad)
     planes[F_SLT] = _pad_to(prog.psum_slot.astype(np.int32), t_pad)
-    instr = np.stack(planes, axis=1)  # [T, N_FIELDS, P]
-    b_pad = np.zeros((n_pad, nb_pad), dtype=np.float32)
-    b_pad[: prog.n, :nb] = bmat
-    n_slots = max(prog.config.psum_words + PSUM_OVERFLOW_SLOTS,
-                  prog.num_slots or 0)
-    x = sptrsv_pallas(
-        jnp.asarray(instr),
-        jnp.asarray(_pad_to(values.astype(np.float32), t_pad)),
-        jnp.asarray(b_pad),
-        cycles_per_block=cycles_per_block,
-        num_slots=n_slots,
-        interpret=interpret,
+    instr = np.stack(planes, axis=1)  # [T_pad, N_FIELDS, P]
+    return instr, _pad_to(values.astype(np.float32), t_pad)
+
+
+def build_solver_cols(
+    prog: Program,
+    width: int,
+    *,
+    cycles_per_block: int = 128,
+    placement: str = "auto",
+    vmem_limit_bytes: int | None = None,
+    x_block_rows: int | None = None,
+    interpret: bool | None = None,
+):
+    """Build an unjitted ``solve(b[n, width]) -> x[n, width]`` closure.
+
+    Stages the instruction tensors once (device-resident across calls),
+    resolves the memory placement, and returns a closure suitable for the
+    per-(program, knobs) executor cache (`executor.make_pallas_executor`).
+    The chosen regime is exposed as ``closure.placement`` /
+    ``closure.plan`` for tests and diagnostics.
+    """
+    mode, plan = resolve_placement(
+        prog, width, placement=placement, vmem_limit_bytes=vmem_limit_bytes,
+        cycles_per_block=cycles_per_block, x_block_rows=x_block_rows,
     )
-    x = np.asarray(x)[: prog.n, :nb]
+    instr_np, values_np = _stage_instructions(prog, cycles_per_block)
+    instr = jnp.asarray(instr_np)
+    values = jnp.asarray(values_np)
+    n = prog.n
+    n_slots = _psum_slots(prog)
+    n_rows = (n + 1) if mode == "resident" else plan.n_hbm
+
+    @jax.jit  # fold the pad/slice into the kernel dispatch
+    def solve_cols(bmat: jnp.ndarray) -> jnp.ndarray:
+        bp = jnp.zeros((n_rows, width), jnp.float32)
+        bp = bp.at[:n].set(jnp.asarray(bmat, jnp.float32))
+        if mode == "resident":
+            x = sptrsv_pallas(
+                instr, values, bp, cycles_per_block=cycles_per_block,
+                num_slots=n_slots, interpret=interpret,
+            )
+        else:
+            x = sptrsv_pallas_blocked(
+                instr, values, bp, window=plan.window, stride=plan.stride,
+                cycles_per_block=cycles_per_block, num_slots=n_slots,
+                interpret=interpret,
+            )
+        return x[:n]
+
+    solve_cols.placement = mode
+    solve_cols.plan = plan
+    return solve_cols
+
+
+def solve(
+    prog: Program,
+    b: np.ndarray,
+    *,
+    cycles_per_block: int = 128,
+    interpret: bool | None = None,
+    placement: str = "auto",
+    vmem_limit_bytes: int = DEFAULT_STATE_BYTES,
+    x_block_rows: int | None = None,
+) -> np.ndarray:
+    """Solve Lx=b by executing `prog` in the Pallas kernel.
+
+    ``b`` may be ``[n]`` (single RHS) or ``[n, B]`` (batched multi-RHS);
+    the result has the matching shape.  Batched solves stream the
+    instruction tensor once for all B columns; the batch axis is padded to
+    a lane-friendly width (`executor.pad_batch`) so nearby widths share one
+    compile, and the underlying solver is cached per (program, padded
+    width, placement knobs) — repeated solves never retrace.
+
+    ``placement`` selects the memory regime (see module docstring);
+    ``interpret=None`` auto-detects: native compile on TPU, interpreter
+    elsewhere.
+    """
+    from repro.core.executor import make_pallas_executor
+
+    bmat, single = as_batch(b)
+    solver = make_pallas_executor(
+        prog, batch=bmat.shape[1], cycles_per_block=cycles_per_block,
+        placement=placement, vmem_limit_bytes=vmem_limit_bytes,
+        x_block_rows=x_block_rows, interpret=interpret,
+    )
+    x = np.asarray(solver(bmat))
     return x[:, 0] if single else x

@@ -1,8 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any jax import: jax locks the device
-# count at first backend initialization (see the dry-run spec).
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 For each cell this script
@@ -18,6 +13,13 @@ Usage:
   python -m repro.launch.dryrun --arch granite-8b --shape train_4k --mesh pod
   python -m repro.launch.dryrun --all          # driver: subprocess per cell
 """
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any further jax import: jax locks the
+# device count at first backend initialization (see the dry-run spec).
+
 
 import argparse
 import json
