@@ -1,33 +1,83 @@
-"""Fig. 10: per-benchmark instruction breakdown (exec / Bnop / Pnop / Dnop /
-Lnop [+ Snop, our spill-reload extension])."""
+"""Fig. 10 + instruction-traffic accounting: per-benchmark instruction mix
+(exec / Bnop / Pnop / Dnop / Lnop [+ Snop, our spill-reload extension]) and
+the solve-path instruction HBM traffic of the packed single-word VLIW
+encoding (DESIGN.md §Perf, "Instruction encoding").
+
+Traffic columns per benchmark:
+
+  * ``bytes_per_lane_cycle``   — streamed instruction bytes per lane per
+    emitted cycle (packed word(s) + pre-gathered f32 value; 8 B in the
+    single-plane regime vs the 24 B of the historical five-plane layout);
+  * ``instr_traffic_kib``      — total instruction HBM traffic of one solve
+    (`Program.instr_bytes()`);
+  * ``unpacked_traffic_kib``   — what the same solve streamed before
+    packing + stall-row elision (five int32 planes + value, every hardware
+    cycle);
+  * ``traffic_ratio``          — unpacked / packed (>= 3x by construction:
+    3x from the word packing, more where stall rows were elided);
+  * ``stall_rows_elided``      — all-NOP cycles dropped at emission
+    (``stats.cycles - stats.emitted_cycles``).
+
+``--smoke`` runs a three-matrix subset without writing CSVs — wired into
+the tier-1 test suite (`tests/test_packed.py`) so traffic-accounting
+regressions fail fast, not just in benchmark runs.
+"""
 
 from __future__ import annotations
+
+import sys
 
 from repro.core import api
 from repro.core.matrices import generate
 
 from .common import FIG9_SET, emit
 
+# bytes/lane-cycle of the pre-packing layout: five int32 planes (op, val_idx
+# gather aside, src, out, ctl, slot) + one f32 pre-gathered value
+UNPACKED_BYTES_PER_LANE_CYCLE = 24
 
-def run() -> list[dict]:
+SMOKE_SET = ["band_cz", "ckt_rajat04", "chem_bp"]
+
+
+def run(smoke: bool = False) -> list[dict]:
     rows = []
-    for name in FIG9_SET:
-        st = api.compile(generate(name)).stats
+    for name in (SMOKE_SET if smoke else FIG9_SET):
+        prog = api.compile(generate(name))
+        st = prog.stats
         bd = st.nop_breakdown()
+        packed = prog.instr_bytes()
+        unpacked = st.cycles * prog.num_cus * UNPACKED_BYTES_PER_LANE_CYCLE
         rows.append({
             "name": name,
             **{k: round(v, 4) for k, v in bd.items()},
             "utilization_pct": round(100 * bd["exec"], 2),
             "cycles": st.cycles,
+            "emitted_cycles": st.emitted_cycles,
+            "stall_rows_elided": st.cycles - st.emitted_cycles,
+            "planes": prog.planes,
+            "bytes_per_lane_cycle": prog.instr_bytes_per_lane_cycle(),
+            "instr_traffic_kib": round(packed / 1024, 1),
+            "unpacked_traffic_kib": round(unpacked / 1024, 1),
+            "traffic_ratio": round(unpacked / packed, 2),
         })
     return rows
 
 
-def main() -> None:
-    rows = run()
+def main(argv: list[str] | None = None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    rows = run(smoke=smoke)
+    if smoke:
+        worst = min(r["traffic_ratio"] for r in rows)
+        print(f"# smoke: {len(rows)} matrices, worst traffic ratio "
+              f"{worst:.2f}x (packed vs 24 B/lane-cycle unpacked)")
+        return
     emit(rows, "fig10_instruction_breakdown")
     best = max(r["utilization_pct"] for r in rows)
+    ratio = max(r["traffic_ratio"] for r in rows)
     print(f"# peak PE utilization: {best:.1f}% (paper reports up to 75.3%)")
+    print(f"# instruction traffic: {rows[0]['bytes_per_lane_cycle']} B/lane-"
+          f"cycle packed; best reduction {ratio:.2f}x vs unpacked")
 
 
 if __name__ == "__main__":

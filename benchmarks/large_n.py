@@ -65,6 +65,11 @@ def main() -> None:
             "num_blocks": plan.num_blocks,
             "resident_state_bytes": 2 * (mat.n + 1) * BATCH * 4,
             "blocked_state_bytes": plan.state_bytes(BATCH),
+            # packed single-word encoding: double-buffered instruction VMEM
+            # (shared by both placements; was 3x larger with 5 planes)
+            "instr_buffer_bytes": sptrsv_ops.instr_buffer_bytes(
+                prog, CYCLES_PER_BLOCK),
+            "instr_traffic_kib": round(prog.instr_bytes() / 1024, 1),
         }
         for label, solver in solvers.items():
             dt = timeit(lambda: np.asarray(solver(bmat)))

@@ -50,12 +50,12 @@ from .program import (
     OP_EDGE,
     OP_FINAL,
     OP_NOP,
-    PS_KEEP,
     PS_LOAD,
     PS_RESET,
     PS_STORE_RESET,
     PS_SWAP,
     Program,
+    decode_instructions,
 )
 from .schedule import PSUM_OVERFLOW_SLOTS
 
@@ -127,15 +127,12 @@ def execute_numpy(prog: Program, b: np.ndarray) -> np.ndarray:
     rf = np.zeros((p, _psum_slots(prog), nb), dtype=np.float64)
     stream = prog.stream.astype(np.float64)
     lanes = np.arange(p)
+    planes = prog.planes
 
     for t in range(prog.cycles):
-        op = prog.opcode[t]
-        active = op != OP_NOP
-        if not active.any():
-            continue
-        # NOP lanes leave psum state untouched: mask their control to KEEP.
-        ctrl = np.where(active, prog.psum_ctrl[t], PS_KEEP)
-        slot = prog.psum_slot[t].astype(np.intp)
+        # shared packed decode — NOP lanes carry word 0, i.e. ctrl PS_KEEP
+        op, src, ctrl, slot = decode_instructions(prog.instr[t], planes)
+        slot = slot.astype(np.intp)
         ctb = ctrl[:, None]
 
         pv = feedback
@@ -149,13 +146,13 @@ def execute_numpy(prog: Program, b: np.ndarray) -> np.ndarray:
         pv = np.where(ctb == PS_SWAP, slot_val, pv)
 
         v = stream[prog.val_idx[t]][:, None]  # [p, 1]
-        src = prog.src_idx[t]
         edge = op == OP_EDGE
         pv = np.where(edge[:, None], pv + v * x[src], pv)
         fin = op == OP_FINAL
         if fin.any():
-            # finalized rows are distinct within a cycle (scheduler guarantee)
-            x[prog.out_idx[t][fin]] = (bmat[src[fin]] - pv[fin]) * v[fin]
+            # FINAL writes x[src] (the derived out index); finalized rows
+            # are distinct within a cycle (scheduler guarantee)
+            x[src[fin]] = (bmat[src[fin]] - pv[fin]) * v[fin]
         feedback = pv
     xr = x[:n]
     return xr[:, 0] if single else xr
@@ -173,12 +170,9 @@ def build_solve_cols(prog: Program, width: int):
     per-device column blocks with the instruction constants replicated.
     """
     n, p = prog.n, prog.num_cus
-    ops = jnp.asarray(prog.opcode.astype(np.int32))
+    planes = prog.planes
+    instr_words = jnp.asarray(prog.instr)  # [T, planes, P] packed
     vidx = jnp.asarray(prog.val_idx)
-    sidx = jnp.asarray(prog.src_idx)
-    oidx = jnp.asarray(prog.out_idx)
-    pctl = jnp.asarray(prog.psum_ctrl.astype(np.int32))
-    pslt = jnp.asarray(prog.psum_slot.astype(np.int32))
     stream = jnp.asarray(prog.stream, dtype=jnp.float32)
     nslots = _psum_slots(prog)
     lanes = jnp.arange(p)
@@ -192,7 +186,8 @@ def build_solve_cols(prog: Program, width: int):
 
         def step(carry, instr):
             x, feedback, rf = carry
-            op, vi, si, oi, ct, sl = instr
+            iw, vi = instr
+            op, si, ct, sl = decode_instructions(iw, planes)
             ctb = ct[:, None]
             pv = feedback
             slot_val = rf[lanes, sl]  # [p, width]
@@ -209,17 +204,16 @@ def build_solve_cols(prog: Program, width: int):
             v = stream[vi][:, None]
             pv = jnp.where((op == OP_EDGE)[:, None], pv + v * x[si], pv)
             outv = (bx[si] - pv) * v
-            # non-FINAL lanes scatter into the dummy row x[n]
-            write_idx = jnp.where(op == OP_FINAL, oi, n)
+            # derived out index: FINAL writes x[src], everything else
+            # scatters into the dummy row x[n]
+            write_idx = jnp.where(op == OP_FINAL, si, n)
             x = x.at[write_idx].set(outv, mode="promise_in_bounds")
             return (x, pv, rf), ()
 
         x0 = jnp.zeros((n + 1, width), dtype=jnp.float32)
         f0 = jnp.zeros((p, width), dtype=jnp.float32)
         rf0 = jnp.zeros((p, nslots, width), dtype=jnp.float32)
-        (x, _, _), _ = jax.lax.scan(
-            step, (x0, f0, rf0), (ops, vidx, sidx, oidx, pctl, pslt)
-        )
+        (x, _, _), _ = jax.lax.scan(step, (x0, f0, rf0), (instr_words, vidx))
         return x[:n]
 
     return solve_cols

@@ -51,6 +51,8 @@ from .program import (
     AccelConfig,
     Program,
     ScheduleStats,
+    pack_instructions,
+    packed_planes,
 )
 
 __all__ = ["compile_program", "allocate_nodes", "PSUM_OVERFLOW_SLOTS"]
@@ -185,7 +187,18 @@ def _icr_assign(edge_cus, cands):
     return assigned
 
 
-def compile_program(mat: TriCSR, cfg: AccelConfig | None = None) -> Program:
+def compile_program(mat: TriCSR, cfg: AccelConfig | None = None, *,
+                    planes: int | None = None) -> Program:
+    """Compile ``mat`` into a packed VLIW `Program`.
+
+    ``planes`` forces the packed-word layout (1 = single-word, 2 = the
+    large-n fallback); ``None`` auto-selects via `program.packed_planes`.
+    Cycles in which no lane executes (bank-conflict replay / global stalls)
+    are counted in ``stats.cycles`` (the hardware cycle count) but *elided*
+    from the emitted instruction stream — an all-NOP row carries no
+    information, so streaming it would be pure HBM traffic
+    (``stats.emitted_cycles`` counts the rows actually emitted).
+    """
     cfg = cfg or AccelConfig()
     if cfg.dataflow not in ("medium", "coarse"):
         raise ValueError(f"unknown dataflow {cfg.dataflow!r}")
@@ -215,7 +228,7 @@ def compile_program(mat: TriCSR, cfg: AccelConfig | None = None) -> Program:
             c = nd.owner
             startable[c][cus[c].pos_of[nd.nid]] = nd.nid
 
-    ops_t, val_t, src_t, out_t, pct_t, psl_t = [], [], [], [], [], []
+    ops_t, val_t, src_t, pct_t, psl_t = [], [], [], [], []
     rlo_t: list[int] = []  # per-cycle min/max solution row touched
     rhi_t: list[int] = []  # (row-blocked executor metadata, DESIGN.md §1)
     stream: list[float] = []
@@ -238,7 +251,6 @@ def compile_program(mat: TriCSR, cfg: AccelConfig | None = None) -> Program:
         op_row = np.zeros(p, dtype=np.uint8)
         val_row = np.zeros(p, dtype=np.int32)
         src_row = np.zeros(p, dtype=np.int32)
-        out_row = np.full(p, n, dtype=np.int32)
         pct_row = np.zeros(p, dtype=np.uint8)
         psl_row = np.zeros(p, dtype=np.uint8)
 
@@ -447,8 +459,7 @@ def compile_program(mat: TriCSR, cfg: AccelConfig | None = None) -> Program:
                 op_row[c] = OP_FINAL
                 val_row[c] = len(stream)
                 stream.append(float(inv_diag[nd.nid]))
-                src_row[c] = nd.nid
-                out_row[c] = nd.nid
+                src_row[c] = nd.nid  # FINAL writes x[src]: out_idx is derived
                 nd.solved = True
                 cu.done_count += 1
                 newly_solved.append(nd)
@@ -477,40 +488,40 @@ def compile_program(mat: TriCSR, cfg: AccelConfig | None = None) -> Program:
                     cu.spilled.add(j)
                     stats.spilled_values += 1
 
-        ops_t.append(op_row)
-        val_t.append(val_row)
-        src_t.append(src_row)
-        out_t.append(out_row)
-        pct_t.append(pct_row)
-        psl_t.append(psl_row)
-        # Solution rows touched this cycle: EDGE lanes read x[src], FINAL
-        # lanes read b[src] and write x[out] (out == src for finals).  The
-        # per-cycle [lo, hi] envelope is what the row-blocked Pallas path
-        # needs to place its VMEM window (empty cycle -> sentinel (n, -1)).
-        touched = src_row[op_row != 0]
-        if touched.size:
+        if executed:
+            ops_t.append(op_row)
+            val_t.append(val_row)
+            src_t.append(src_row)
+            pct_t.append(pct_row)
+            psl_t.append(psl_row)
+            # Solution rows touched this cycle: EDGE lanes read x[src],
+            # FINAL lanes read b[src] and write x[src].  The per-cycle
+            # [lo, hi] envelope is what the row-blocked Pallas path needs
+            # to place its VMEM window.
+            touched = src_row[op_row != 0]
             rlo_t.append(int(touched.min()))
             rhi_t.append(int(touched.max()))
-        else:
-            rlo_t.append(n)
-            rhi_t.append(-1)
+        # else: all-NOP stall cycle — counts as hardware time but is elided
+        # from the emitted stream (no state changes, no traffic needed)
         cycle += 1
 
     stats.cycles = cycle
+    stats.emitted_cycles = len(ops_t)
     stats.per_cu_edges = np.array([cu.edge_count for cu in cus])
-    stats.compile_seconds = time.perf_counter() - t0
     num_slots = max(cu.next_over for cu in cus)
+
+    instr = pack_instructions(
+        np.stack(ops_t), np.stack(src_t), np.stack(pct_t), np.stack(psl_t),
+        planes=planes if planes is not None else packed_planes(n),
+    )
+    stats.compile_seconds = time.perf_counter() - t0
 
     return Program(
         num_slots=num_slots,
         config=cfg,
         n=n,
-        opcode=np.stack(ops_t),
+        instr=instr,
         val_idx=np.stack(val_t),
-        src_idx=np.stack(src_t),
-        out_idx=np.stack(out_t),
-        psum_ctrl=np.stack(pct_t),
-        psum_slot=np.stack(psl_t),
         stream=np.array(stream, dtype=np.float32),
         stats=stats,
         row_lo=np.array(rlo_t, dtype=np.int32),

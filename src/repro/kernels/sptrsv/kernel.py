@@ -70,34 +70,32 @@ from repro.core.program import (
     PS_RESET,
     PS_STORE_RESET,
     PS_SWAP,
+    decode_instructions,
 )
 from repro.kernels.common import default_interpret, resolve_interpret
 
-__all__ = ["sptrsv_pallas", "sptrsv_pallas_blocked", "default_interpret",
-           "N_FIELDS", "F_OP", "F_SRC", "F_OUT", "F_CTL", "F_SLT"]
-
-# int32 planes of the stacked instruction tensor [T, N_FIELDS, P]
-F_OP, F_SRC, F_OUT, F_CTL, F_SLT = range(5)
-N_FIELDS = 5
+__all__ = ["sptrsv_pallas", "sptrsv_pallas_blocked", "default_interpret"]
 
 
 def _exec_cycle(instrs, vals, t, xw, fb, rf, bw, lanes, base, win_rows,
-                dummy_row):
+                dummy_row, planes):
     """One VLIW cycle over all lanes and RHS columns (shared by both
     placements).
 
-    ``xw``/``bw`` hold solution/RHS rows ``[base, base + win_rows)`` (the
-    whole padded vector with ``base=0`` in the VMEM-resident kernel, the
-    sliding window in the blocked one); ``dummy_row`` absorbs the scatter
-    of non-FINAL lanes.  Instruction row indices are rebased and clipped —
-    active lanes are in-window by the wrapper's feasibility check, so the
-    clip only tames NOP lanes' zero indices.
+    ``instrs`` is the packed ``[tb, planes, P]`` int32 cycle block; the
+    fields are decoded in-register with the shared bitwise helper
+    (`program.decode_instructions`) — the same format all three backends
+    consume.  ``xw``/``bw`` hold solution/RHS rows ``[base, base +
+    win_rows)`` (the whole padded vector with ``base=0`` in the
+    VMEM-resident kernel, the sliding window in the blocked one);
+    ``dummy_row`` absorbs the scatter of non-FINAL lanes.  Instruction row
+    indices are rebased and clipped — active lanes are in-window by the
+    wrapper's feasibility check, so the clip only tames NOP lanes' zero
+    indices.  The write index is derived from ``(op, src)``: FINAL lanes
+    write x[src], everything else the dummy row.
     """
-    op = instrs[t, F_OP]
-    si = instrs[t, F_SRC]
-    oi = instrs[t, F_OUT]
-    ct = instrs[t, F_CTL][:, None]
-    sl = instrs[t, F_SLT]
+    op, si, ct, sl = decode_instructions(instrs[t], planes)
+    ct = ct[:, None]
     v = vals[t][:, None]                # [P, 1] broadcast over batch
 
     pv = fb
@@ -117,23 +115,23 @@ def _exec_cycle(instrs, vals, t, xw, fb, rf, bw, lanes, base, win_rows,
         (op == OP_EDGE)[:, None], pv + v * jnp.take(xw, si_l, axis=0), pv
     )
     outv = (jnp.take(bw, si_l, axis=0) - pv) * v
-    widx = jnp.where(op == OP_FINAL,
-                     jnp.clip(oi - base, 0, win_rows - 1), dummy_row)
+    widx = jnp.where(op == OP_FINAL, si_l, dummy_row)
     xw = xw.at[widx].set(jnp.where(fin, outv, jnp.take(xw, widx, axis=0)))
     return xw, pv, rf
 
 
 def _kernel(
     # inputs
-    instr_ref,  # [T, N_FIELDS, P] int32, HBM-resident (streamed by DMA)
-    val_ref,    # [T, P]           f32,   HBM-resident (pre-gathered values)
-    b_ref,      # [n_pad, B]       f32,   VMEM — loaded once per solve
+    instr_ref,  # [T, planes, P] int32, HBM-resident (streamed by DMA)
+    val_ref,    # [T, P]         f32,   HBM-resident (pre-gathered values)
+    b_ref,      # [n_pad, B]     f32,   VMEM — loaded once per solve
     # outputs
-    x_out_ref,  # [n_pad, B]       f32
+    x_out_ref,  # [n_pad, B]     f32
     *,
     cycles_per_block: int,
     num_blocks: int,
     num_slots: int,
+    planes: int,
 ):
     tb = cycles_per_block
     p = instr_ref.shape[-1]
@@ -169,14 +167,14 @@ def _kernel(
 
             instr_dma(slot, g).wait()
             val_dma(slot, g).wait()
-            instrs = ibuf[slot]     # [tb, N_FIELDS, P]
+            instrs = ibuf[slot]     # [tb, planes, P]
             vals = vbuf[slot]       # [tb, P]
 
             def cycle(t, c):
                 x, fb, rf = c
                 # base=0: absolute row indices; x[n_pad - 1] is the dummy row
                 return _exec_cycle(instrs, vals, t, x, fb, rf, b, lanes,
-                                   0, n_pad, n_pad - 1)
+                                   0, n_pad, n_pad - 1, planes)
 
             return jax.lax.fori_loop(0, tb, cycle, carry)
 
@@ -188,7 +186,7 @@ def _kernel(
 
     pl.run_scoped(
         body,
-        ibuf=pltpu.VMEM((2, tb, N_FIELDS, p), jnp.int32),
+        ibuf=pltpu.VMEM((2, tb, planes, p), jnp.int32),
         vbuf=pltpu.VMEM((2, tb, p), jnp.float32),
         isem=pltpu.SemaphoreType.DMA((2,)),
         vsem=pltpu.SemaphoreType.DMA((2,)),
@@ -200,7 +198,7 @@ def _kernel(
     static_argnames=("cycles_per_block", "num_slots", "interpret"),
 )
 def sptrsv_pallas(
-    instr: jnp.ndarray,    # [T, N_FIELDS, P] int32 (T padded to block multiple)
+    instr: jnp.ndarray,    # [T, planes, P] packed int32 (T padded to block multiple)
     values: jnp.ndarray,   # [T, P] f32 (pre-gathered stream values)
     b: jnp.ndarray,        # [n_pad, B] f32 (n + 1 dummy tail row)
     *,
@@ -209,8 +207,8 @@ def sptrsv_pallas(
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     interpret = resolve_interpret(interpret)
-    t, nf, p = instr.shape
-    assert nf == N_FIELDS, f"expected {N_FIELDS} instruction fields, got {nf}"
+    t, planes, p = instr.shape
+    assert planes in (1, 2), f"expected packed 1- or 2-plane words, got {planes}"
     assert t % cycles_per_block == 0, "pad the instruction stream first"
     num_blocks = t // cycles_per_block
     n_pad, nb = b.shape
@@ -220,6 +218,7 @@ def sptrsv_pallas(
         cycles_per_block=cycles_per_block,
         num_blocks=num_blocks,
         num_slots=num_slots,
+        planes=planes,
     )
     return pl.pallas_call(
         kernel,
@@ -239,17 +238,18 @@ def sptrsv_pallas(
 # ---------------------------------------------------------------------------
 def _blocked_kernel(
     # inputs
-    instr_ref,   # [T, N_FIELDS, P] int32, HBM (streamed by DMA)
-    val_ref,     # [T, P]           f32,   HBM (pre-gathered values)
-    b_hbm_ref,   # [n_hbm, B]       f32,   HBM (windowed by DMA)
+    instr_ref,   # [T, planes, P] int32, HBM (streamed by DMA)
+    val_ref,     # [T, P]         f32,   HBM (pre-gathered values)
+    b_hbm_ref,   # [n_hbm, B]     f32,   HBM (windowed by DMA)
     # outputs
-    x_hbm_ref,   # [n_hbm, B]       f32,   HBM (windowed by DMA)
+    x_hbm_ref,   # [n_hbm, B]     f32,   HBM (windowed by DMA)
     *,
     cycles_per_block: int,
     num_blocks: int,
     num_slots: int,
     window: int,
     stride: int,
+    planes: int,
 ):
     """x/b HBM-resident solve over a sliding VMEM row window.
 
@@ -353,7 +353,7 @@ def _blocked_kernel(
                 b_dma(nxt, g + 1).start()
                 x_refill_dma(nxt, g + 1).start()
 
-            instrs = ibuf[slot]     # [tb, N_FIELDS, P]
+            instrs = ibuf[slot]     # [tb, planes, P]
             vals = vbuf[slot]       # [tb, P]
             xw = xwin[slot]         # [w + 1, B]; row w is the dummy row
             bw = bwin[slot]         # [w, B]
@@ -362,7 +362,7 @@ def _blocked_kernel(
             def cycle(t, c):
                 x_, fb_, rf_ = c
                 return _exec_cycle(instrs, vals, t, x_, fb_, rf_, bw, lanes,
-                                   base, w, w)
+                                   base, w, w, planes)
 
             xw, fb, rf = jax.lax.fori_loop(0, tb, cycle, (xw, fb, rf))
             xwin[slot] = xw  # publish block-g writes for the boundary DMAs
@@ -389,7 +389,7 @@ def _blocked_kernel(
 
     pl.run_scoped(
         body,
-        ibuf=pltpu.VMEM((2, tb, N_FIELDS, p), jnp.int32),
+        ibuf=pltpu.VMEM((2, tb, planes, p), jnp.int32),
         vbuf=pltpu.VMEM((2, tb, p), jnp.float32),
         xwin=pltpu.VMEM((2, w + 1, nb), jnp.float32),
         bwin=pltpu.VMEM((2, w, nb), jnp.float32),
@@ -408,7 +408,7 @@ def _blocked_kernel(
                      "interpret"),
 )
 def sptrsv_pallas_blocked(
-    instr: jnp.ndarray,    # [T, N_FIELDS, P] int32 (T padded to block multiple)
+    instr: jnp.ndarray,    # [T, planes, P] packed int32 (T padded to block multiple)
     values: jnp.ndarray,   # [T, P] f32 (pre-gathered stream values)
     b: jnp.ndarray,        # [n_hbm, B] f32 (padded to the window sweep)
     *,
@@ -426,8 +426,8 @@ def sptrsv_pallas_blocked(
     program's row-range metadata.
     """
     interpret = resolve_interpret(interpret)
-    t, nf, p = instr.shape
-    assert nf == N_FIELDS, f"expected {N_FIELDS} instruction fields, got {nf}"
+    t, planes, p = instr.shape
+    assert planes in (1, 2), f"expected packed 1- or 2-plane words, got {planes}"
     assert t % cycles_per_block == 0, "pad the instruction stream first"
     num_blocks = t // cycles_per_block
     n_hbm, nb = b.shape
@@ -442,6 +442,7 @@ def sptrsv_pallas_blocked(
         num_slots=num_slots,
         window=window,
         stride=stride,
+        planes=planes,
     )
     return pl.pallas_call(
         kernel,

@@ -17,9 +17,12 @@ program's row-access envelope admits a sliding window (`plan_window`).
 The wrapper performs the compiler-side data staging the hardware's stream
 memory provides: values are pre-gathered per instruction word so the kernel
 streams them sequentially (no positional indirection, as in the paper's
-stream-memory design), and the five int32 instruction planes are stacked
-into one ``[T, N_FIELDS, P]`` tensor so each cycle block arrives in VMEM
-with a single DMA.
+stream-memory design), and the compiler's packed instruction words
+(``Program.instr``, ``[T, planes, P]`` int32 — DESIGN.md §Perf,
+"Instruction encoding") are padded to the cycle-block multiple so each
+block arrives in VMEM with a single DMA.  Per lane-cycle the kernel
+streams ``4 * planes + 4`` bytes (8 B in the single-plane regime) instead
+of the 24 B the historical five unpacked planes cost.
 """
 
 from __future__ import annotations
@@ -32,24 +35,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.executor import _psum_slots, as_batch
-from repro.core.program import Program
+from repro.core.program import Program, decode_instructions
 
-from .kernel import (
-    F_CTL,
-    F_OP,
-    F_OUT,
-    F_SLT,
-    F_SRC,
-    N_FIELDS,
-    sptrsv_pallas,
-    sptrsv_pallas_blocked,
-)
+from .kernel import sptrsv_pallas, sptrsv_pallas_blocked
 
 __all__ = [
     "solve",
     "plan_window",
     "resolve_placement",
     "build_solver_cols",
+    "instr_buffer_bytes",
+    "state_bytes",
     "WindowPlan",
     "DEFAULT_STATE_BYTES",
 ]
@@ -184,28 +180,62 @@ def resolve_placement(
 
 
 def _pad_to(arr: np.ndarray, t_pad: int, fill=0) -> np.ndarray:
-    t, p = arr.shape
+    t = arr.shape[0]
     if t == t_pad:
         return arr
-    out = np.full((t_pad, p), fill, dtype=arr.dtype)
+    out = np.full((t_pad,) + arr.shape[1:], fill, dtype=arr.dtype)
     out[:t] = arr
     return out
 
 
 def _stage_instructions(prog: Program, cycles_per_block: int):
-    """Stack + pad the five instruction planes and pre-gather the values."""
-    t, p = prog.opcode.shape
+    """Pad the packed instruction words and pre-gather the stream values.
+
+    The program already carries the packed ``[T, planes, P]`` words — the
+    pack happens once at compile time; staging only pads to the cycle-block
+    multiple (pad rows are the all-NOP word 0) and gathers the f32 values
+    per instruction slot so the kernel streams them positionally.
+    """
+    t = prog.cycles
     t_pad = _round_up(t, cycles_per_block)
     values = prog.stream[prog.val_idx]          # [T, P] pre-gathered
-    values = values * (prog.opcode != 0)        # NOP lanes -> 0.0
-    planes: list = [None] * N_FIELDS
-    planes[F_OP] = _pad_to(prog.opcode.astype(np.int32), t_pad)
-    planes[F_SRC] = _pad_to(prog.src_idx.astype(np.int32), t_pad)
-    planes[F_OUT] = _pad_to(prog.out_idx.astype(np.int32), t_pad, fill=prog.n)
-    planes[F_CTL] = _pad_to(prog.psum_ctrl.astype(np.int32), t_pad)
-    planes[F_SLT] = _pad_to(prog.psum_slot.astype(np.int32), t_pad)
-    instr = np.stack(planes, axis=1)  # [T_pad, N_FIELDS, P]
+    # transient decode for the NOP mask (don't touch the prog.opcode
+    # property: it would pin all four decoded planes on the Program)
+    op = decode_instructions(prog.instr, prog.planes)[0]
+    values = values * (op != 0)                 # NOP lanes -> 0.0
+    instr = _pad_to(prog.instr, t_pad)          # [T_pad, planes, P]
     return instr, _pad_to(values.astype(np.float32), t_pad)
+
+
+def instr_buffer_bytes(prog: Program, cycles_per_block: int = 128) -> int:
+    """VMEM bytes of the kernel's double-buffered instruction streaming.
+
+    Two cycle-block buffers of packed words plus two of pre-gathered f32
+    values: ``2 * tb * P * (4 * planes + 4)`` — halved-plus by the packed
+    single-word encoding (planes=1: 8 B per buffered lane-cycle vs the 24 B
+    of the historical five-plane layout).
+    """
+    return 2 * cycles_per_block * prog.num_cus * (4 * prog.planes + 4)
+
+
+def state_bytes(prog: Program, nb: int, *, placement: str,
+                plan: WindowPlan | None = None,
+                cycles_per_block: int = 128) -> dict:
+    """VMEM accounting of one Pallas solve: solve state + instruction buffers.
+
+    Returns ``{"xb": ..., "instr": ..., "total": ...}`` bytes for ``nb``
+    RHS columns under ``placement`` (``"blocked"`` needs the `WindowPlan`).
+    """
+    if placement == "blocked":
+        if plan is None or not plan.feasible:
+            raise ValueError("blocked accounting needs a feasible WindowPlan")
+        xb = plan.state_bytes(nb)
+    elif placement == "resident":
+        xb = 2 * (prog.n + 1) * nb * 4
+    else:
+        raise ValueError(f"unknown placement {placement!r}")
+    ib = instr_buffer_bytes(prog, cycles_per_block)
+    return {"xb": xb, "instr": ib, "total": xb + ib}
 
 
 def build_solver_cols(
