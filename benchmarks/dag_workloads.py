@@ -1,0 +1,115 @@
+"""DAG-workload frontends vs the lower-triangular baseline (DESIGN.md §6).
+
+The staged compiler's frontend boundary opens the stack to SpTRSV-like
+workloads beyond Lx=b; this benchmark runs, per suite matrix:
+
+  * ``lower``          — the classic Lx=b baseline;
+  * ``upper``          — Ux=b with U = Lᵀ through the CSC-row-reversal
+    frontend (`core/frontends/upper.py`);
+  * ``transpose_pair`` — the full incomplete-Cholesky application
+    x = Lᵀ \\ (L \\ b) from ONE `api.compile_pair` (cycles column = the
+    backward sweep; the forward sweep equals ``lower``);
+  * ``circuit``        — a DPU-v2-style weighted-accumulate circuit
+    (`core/frontends/dagcirc.py`) matched to the matrix's node count.
+
+Columns: modeled schedule metrics (cycles, emitted rows, GOPS at the
+paper's 150 MHz, utilization, packed planes + instruction traffic — all
+straight from `api.report`, which now carries the PR-4 encoding fields)
+plus ``max_err``, the numpy-executor round-trip error against the
+scipy/numpy oracle of each workload.
+
+``--smoke`` runs a small subset without writing CSVs — wired into tier-1
+(`tests/test_frontends.py`) so frontend regressions fail fast.
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core import api
+from repro.core.csr import serial_solve, serial_solve_upper, transpose_upper
+from repro.core.frontends.dagcirc import random_circuit
+from repro.core.matrices import generate
+
+from .common import emit
+
+BENCH_SET = ["band_cz", "ckt_rajat04", "chem_bp", "band_dw2048",
+             "grid_activsg", "wide_c36"]
+SMOKE_SET = ["band_cz", "ckt_rajat04"]
+
+
+def _row(workload: str, prog, max_err: float) -> dict:
+    rep = api.report(prog)
+    return {
+        "workload": workload,
+        "name": rep["name"],
+        "n": rep["n"],
+        "nnz": rep["nnz"],
+        "cycles": rep["cycles"],
+        "emitted_cycles": rep["emitted_cycles"],
+        "planes": rep["planes"],
+        "instr_kib": round(rep["instr_bytes"] / 1024, 1),
+        "throughput_gops": rep["throughput_gops"],
+        "pe_utilization": rep["pe_utilization"],
+        "max_err": float(f"{max_err:.2e}"),
+    }
+
+
+def run(smoke: bool = False) -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for name in (SMOKE_SET if smoke else BENCH_SET):
+        mat = generate(name)
+        b = rng.standard_normal(mat.n)
+
+        prog = api.compile(mat)
+        err = np.abs(api.solve_numpy(prog, b) - serial_solve(mat, b)).max()
+        rows.append(_row("lower", prog, err))
+
+        u = transpose_upper(mat)
+        cw = api.compile_upper(u)
+        err = np.abs(cw.solve(b, backend="numpy")
+                     - serial_solve_upper(u, b)).max()
+        rows.append(_row("upper", cw.program, err))
+
+        pair = api.compile_pair(mat)
+        y = serial_solve(mat, b)
+        ref = serial_solve_upper(u, y)
+        err = np.abs(pair.solve(b, backend="numpy") - ref).max()
+        rows.append(_row("transpose_pair", pair.backward.program, err))
+
+        circ = random_circuit(mat.n, max_fan_in=6, seed=mat.n,
+                              locality=max(32, mat.n // 16),
+                              name=f"circ_{name}")
+        ccw = api.compile_circuit(circ)
+        uvec = rng.standard_normal(circ.n)
+        err = np.abs(ccw.solve(uvec, backend="numpy") - circ.eval(uvec)).max()
+        rows.append(_row("circuit", ccw.program, err))
+    return rows
+
+
+def main(argv: list[str] | None = None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    rows = run(smoke=smoke)
+    if smoke:
+        worst = max(r["max_err"] for r in rows)
+        print(f"# smoke: {len(rows)} workload rows, worst oracle error "
+              f"{worst:.2e}")
+        return
+    emit(rows, "dag_workloads")
+    per_wl = {}
+    for r in rows:
+        per_wl.setdefault(r["workload"], []).append(r["cycles"])
+    base = per_wl.pop("lower")
+    for wl, cyc in sorted(per_wl.items()):
+        rel = np.mean([c / b for c, b in zip(cyc, base)])
+        print(f"# {wl}: mean cycles {rel:.2f}x the lower-tri baseline")
+    print("# all workloads share the Program format: every executor, the "
+          "batched/sharded paths and the packed encoding ran them unchanged")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ import time
 from . import (
     batched_rhs,
     compiler_scaling,
+    dag_workloads,
     large_n,
     node_splitting,
     dataflow_comparison,
@@ -38,6 +39,7 @@ MODULES = {
     "batched": batched_rhs,
     "sharded": sharded_batch,
     "large_n": large_n,
+    "dagwork": dag_workloads,
 }
 
 

@@ -8,6 +8,17 @@
     solver = api.make_solver(prog, batch=32)     # cached jitted closure
     api.report(prog)                             # paper metrics
 
+DAG-workload frontends (DESIGN.md §6): the compiler is a staged pipeline
+over a generic compute-DAG IR, so SpTRSV-like workloads beyond Lx=b
+compile to the same `Program` format and run on every executor:
+
+    cw = api.compile_upper(U)                    # Ux=b (UpperCSR)
+    x = cw.solve(b)                              # or api.solve_upper(cw, b)
+    pair = api.compile_pair(L)                   # Ly=b then Lᵀx=y (IC sweep)
+    x = pair.solve(b)
+    cw = api.compile_circuit(circ)               # general DAG circuit
+    y = cw.solve(u)
+
 Batched multi-RHS execution: the compiled VLIW program depends only on L,
 so one pass over the instruction stream can solve many right-hand sides at
 once (`solve_batch`, or `solve` with a 2-D ``b``).  Executors are cached
@@ -23,10 +34,13 @@ per (program, padded per-device width, mesh).
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from . import matrices
-from .csr import TriCSR, random_rhs, serial_solve
+from .compiler import ComputeDag, compile_dag as _compile_dag
+from .csr import TriCSR, UpperCSR, random_rhs, serial_solve, transpose_upper
 from .dag import DagInfo, analyze
 from .executor import (
     as_batch,
@@ -37,21 +51,32 @@ from .executor import (
     validate_backend,
 )
 from .fine import FineConfig, FineStats, schedule_fine
+from .frontends.dagcirc import DagCircuit, lower_circuit
+from .frontends.upper import lower_upper
 from .program import AccelConfig, Program
 from .schedule import compile_program
 
 __all__ = [
     "matrix",
     "compile",
+    "compile_dag",
+    "compile_upper",
+    "compile_pair",
+    "compile_circuit",
     "solve",
     "solve_batch",
+    "solve_upper",
+    "solve_pair",
     "make_solver",
     "solve_numpy",
     "reference_solve",
     "report",
     "AccelConfig",
     "Program",
+    "CompiledWorkload",
+    "SolvePair",
     "TriCSR",
+    "UpperCSR",
     "DagInfo",
 ]
 
@@ -137,6 +162,115 @@ def make_solver(prog: Program, batch: int | None = None, mesh=None,
     return make_jax_executor(prog, batch=batch)
 
 
+# ---------------------------------------------------------------------------
+# DAG-workload frontends (DESIGN.md §6): upper / transpose / circuit solves
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(eq=False)
+class CompiledWorkload:
+    """A compiled frontend workload: `Program` + internal↔user index map.
+
+    Frontends whose internal node numbering differs from the user's
+    unknowns (e.g. the reversed upper-triangular solve) carry ``perm``:
+    internal node ``k`` solves user unknown ``perm[k]``, so the program
+    consumes ``b[perm]`` and its solution scatters back through ``perm``.
+    ``perm=None`` means the identity (lower-tri, circuits).
+
+    `solve` accepts ``[n]`` or ``[n, B]`` right-hand sides and runs any
+    executor: ``backend`` in {"numpy", "jax", "pallas"} plus the usual
+    batching/sharding/placement knobs of `solve_batch` — the emitted
+    `Program` format is unchanged, so every execution path works on every
+    frontend workload.
+    """
+
+    program: Program
+    perm: np.ndarray | None = None
+    name: str = ""
+
+    def solve(self, b: np.ndarray, *, backend: str = "jax", mesh=None,
+              **backend_opts) -> np.ndarray:
+        b = np.asarray(b)
+        single = b.ndim == 1
+        bi = b[self.perm] if self.perm is not None else b
+        if backend == "numpy":
+            if mesh is not None or backend_opts:
+                raise ValueError("backend='numpy' takes no mesh/extra options")
+            xi = execute_numpy(self.program, bi)
+        elif backend == "jax" and mesh is None and not backend_opts:
+            xi = execute_jax(self.program, bi)
+        else:
+            bmat, _ = as_batch(bi)
+            xi = solve_batch(self.program, bmat, mesh=mesh, backend=backend,
+                             **backend_opts)
+            if single:
+                xi = xi[:, 0]
+        if self.perm is None:
+            return xi
+        x = np.empty_like(xi)
+        x[self.perm] = xi
+        return x
+
+
+@dataclasses.dataclass(eq=False)
+class SolvePair:
+    """Forward+backward sweep pair: Ly=b then Lᵀx=y from ONE factor L.
+
+    One incomplete-Cholesky preconditioner application is
+    ``x = Lᵀ \\ (L \\ b)``; `compile_pair` compiles both sweeps once and
+    this object replays them per application (any backend/mesh knobs are
+    shared by both sweeps).
+    """
+
+    forward: CompiledWorkload   # Ly=b (identity perm)
+    backward: CompiledWorkload  # Lᵀx=y (reversed node order)
+
+    def solve(self, b: np.ndarray, **opts) -> np.ndarray:
+        return self.backward.solve(self.forward.solve(b, **opts), **opts)
+
+
+def compile_dag(dag: ComputeDag, cfg: AccelConfig | None = None, *,
+                planes: int | None = None) -> Program:
+    """Compile a generic `compiler.ComputeDag` through the staged pipeline."""
+    return _compile_dag(dag, cfg, planes=planes)
+
+
+def compile_upper(mat: UpperCSR, cfg: AccelConfig | None = None, *,
+                  planes: int | None = None) -> CompiledWorkload:
+    """Compile the upper-triangular solve Ux=b (CSC-row reversal frontend)."""
+    dag, perm = lower_upper(mat)
+    return CompiledWorkload(_compile_dag(dag, cfg, planes=planes),
+                            perm=perm, name=mat.name)
+
+
+def compile_pair(mat: TriCSR, cfg: AccelConfig | None = None, *,
+                 planes: int | None = None) -> SolvePair:
+    """Compile the forward (Ly=b) + backward (Lᵀx=y) sweep pair of ``mat``."""
+    fwd = CompiledWorkload(compile_program(mat, cfg, planes=planes),
+                           name=mat.name)
+    bwd = compile_upper(transpose_upper(mat), cfg, planes=planes)
+    return SolvePair(forward=fwd, backward=bwd)
+
+
+def compile_circuit(circ: DagCircuit, cfg: AccelConfig | None = None, *,
+                    planes: int | None = None) -> CompiledWorkload:
+    """Compile a general DAG circuit (`frontends.dagcirc`) workload."""
+    return CompiledWorkload(_compile_dag(lower_circuit(circ), cfg,
+                                         planes=planes), name=circ.name)
+
+
+def solve_upper(cw: CompiledWorkload | UpperCSR, b: np.ndarray,
+                **opts) -> np.ndarray:
+    """Solve Ux=b; accepts a `CompiledWorkload` (preferred — reuses the
+    compile) or a raw `UpperCSR` (compiled ad hoc)."""
+    if isinstance(cw, UpperCSR):
+        cw = compile_upper(cw)
+    return cw.solve(b, **opts)
+
+
+def solve_pair(pair: SolvePair, b: np.ndarray, **opts) -> np.ndarray:
+    """Run one forward+backward preconditioner application through `pair`."""
+    return pair.solve(b, **opts)
+
+
 def solve_numpy(prog: Program, b: np.ndarray) -> np.ndarray:
     """Reference numpy executor; accepts ``[n]`` or ``[n, B]`` like `solve`."""
     return execute_numpy(prog, b)
@@ -153,6 +287,11 @@ def report(prog: Program) -> dict:
         "n": st.n,
         "nnz": st.nnz,
         "cycles": st.cycles,
+        # packed-encoding accounting (PR 4) — benchmark CSVs and docs read
+        # these here instead of recomputing them from the Program by hand
+        "emitted_cycles": st.emitted_cycles,
+        "planes": prog.planes,
+        "instr_bytes": prog.instr_bytes(),
         "throughput_gops": round(st.throughput_gops(cfg), 3),
         "peak_gops": round(st.peak_throughput_gops(cfg), 3),
         "pe_utilization": round(st.utilization(), 4),

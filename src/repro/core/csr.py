@@ -14,7 +14,15 @@ from typing import Iterable
 
 import numpy as np
 
-__all__ = ["TriCSR", "serial_solve", "from_coo", "random_rhs"]
+__all__ = [
+    "TriCSR",
+    "UpperCSR",
+    "serial_solve",
+    "serial_solve_upper",
+    "from_coo",
+    "transpose_upper",
+    "random_rhs",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,6 +122,83 @@ def from_coo(
     return mat
 
 
+@dataclasses.dataclass(frozen=True)
+class UpperCSR:
+    """A sparse upper-triangular matrix, the mirror of `TriCSR`'s layout.
+
+    Within each row the columns are ascending with the diagonal stored
+    FIRST (``rowptr[i]``) — the natural output of transposing a `TriCSR`
+    row-major.  Solved by backward substitution (`serial_solve_upper`) or
+    compiled through the upper/transpose frontend
+    (`core/frontends/upper.py`), which reverses the row order so the
+    system becomes lower-triangular in the internal node numbering.
+    """
+
+    n: int
+    rowptr: np.ndarray  # int64 [n+1]
+    colidx: np.ndarray  # int64 [nnz]
+    values: np.ndarray  # float64 [nnz]
+    name: str = "unnamed"
+
+    @property
+    def nnz(self) -> int:
+        return int(self.rowptr[-1])
+
+    @property
+    def n_edges(self) -> int:
+        return self.nnz - self.n
+
+    def validate(self) -> None:
+        assert self.rowptr.shape == (self.n + 1,)
+        assert self.rowptr[0] == 0
+        assert np.all(np.diff(self.rowptr) >= 1), "every row needs a diagonal"
+        for i in range(self.n):
+            lo, hi = self.rowptr[i], self.rowptr[i + 1]
+            cols = self.colidx[lo:hi]
+            assert cols[0] == i, f"row {i}: diagonal must be stored first"
+            off = cols[1:]
+            assert np.all(off > i), f"row {i}: sub-diagonal entry"
+            assert np.all(np.diff(off) > 0), f"row {i}: unsorted/duplicate cols"
+        assert not np.any(self.values[self.rowptr[:-1]] == 0.0), "zero diagonal"
+
+    def row(self, i: int) -> tuple[np.ndarray, np.ndarray]:
+        lo, hi = self.rowptr[i], self.rowptr[i + 1]
+        return self.colidx[lo:hi], self.values[lo:hi]
+
+    def diag(self) -> np.ndarray:
+        return self.values[self.rowptr[:-1]]
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros((self.n, self.n))
+        for i in range(self.n):
+            cols, vals = self.row(i)
+            out[i, cols] = vals
+        return out
+
+
+def transpose_upper(mat: TriCSR, name: str | None = None) -> UpperCSR:
+    """Return ``U = Lᵀ`` as an `UpperCSR` (CSR of Lᵀ == CSC of L).
+
+    Row j of U collects every L[i, j] sorted by i ascending; since L is
+    lower triangular with a full diagonal, the first entry of each U row
+    is automatically the diagonal.
+    """
+    n = mat.n
+    rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(mat.rowptr))
+    order = np.argsort(mat.colidx * n + rows, kind="stable")
+    rowptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(np.bincount(mat.colidx, minlength=n), out=rowptr[1:])
+    out = UpperCSR(
+        n=n,
+        rowptr=rowptr,
+        colidx=rows[order],
+        values=mat.values[order],
+        name=name if name is not None else f"{mat.name}^T",
+    )
+    out.validate()
+    return out
+
+
 def serial_solve(mat: TriCSR, b: np.ndarray) -> np.ndarray:
     """Algorithm 1 of the paper — the ground-truth oracle."""
     x = np.zeros(mat.n, dtype=np.float64)
@@ -123,6 +208,18 @@ def serial_solve(mat: TriCSR, b: np.ndarray) -> np.ndarray:
         for j in range(lo, hi - 1):
             s += mat.values[j] * x[mat.colidx[j]]
         x[i] = (b[i] - s) / mat.values[hi - 1]
+    return x
+
+
+def serial_solve_upper(mat: UpperCSR, b: np.ndarray) -> np.ndarray:
+    """Backward substitution for Ux=b — the upper-frontend oracle."""
+    x = np.zeros(mat.n, dtype=np.float64)
+    for i in range(mat.n - 1, -1, -1):
+        lo, hi = mat.rowptr[i], mat.rowptr[i + 1]
+        s = 0.0
+        for j in range(lo + 1, hi):
+            s += mat.values[j] * x[mat.colidx[j]]
+        x[i] = (b[i] - s) / mat.values[lo]
     return x
 
 

@@ -1,7 +1,11 @@
-"""DAG view of a sparse triangular system + the paper's structural statistics.
+"""DAG view + the paper's structural statistics, for any workload.
 
-Nodes = matrix rows, edges = off-diagonal non-zeros (j -> i for L[i, j]).
-Since the matrix is lower triangular, row order IS a topological order.
+Historically this module analyzed sparse triangular systems only (nodes =
+matrix rows, edges = off-diagonal non-zeros).  With the staged compiler's
+generic frontend boundary (DESIGN.md §6) every function here accepts
+either a `TriCSR` *or* a `compiler.ComputeDag` — the workloads of the
+upper/transpose/circuit frontends get the same Table III treatment as the
+paper's matrices.  Node ids are a topological order in both cases.
 """
 
 from __future__ import annotations
@@ -12,29 +16,35 @@ import numpy as np
 
 from .csr import TriCSR
 
-__all__ = ["DagInfo", "analyze", "out_adjacency"]
+__all__ = ["DagInfo", "analyze", "compute_levels", "edge_view", "out_adjacency"]
 
 
-def out_adjacency(mat: TriCSR) -> tuple[np.ndarray, np.ndarray]:
-    """CSC-style adjacency: for each node j, the consumers i with edge j->i.
+def edge_view(g) -> tuple[int, np.ndarray, np.ndarray]:
+    """Normalize a workload to ``(n, ptr, src)`` edge arrays.
+
+    Accepts a `TriCSR` (off-diagonal non-zeros are the edges) or anything
+    already shaped like a `compiler.ComputeDag` (``n`` / ``ptr`` / ``src``
+    attributes, e.g. a `frontends.dagcirc.DagCircuit`).
+    """
+    if isinstance(g, TriCSR):
+        from .frontends.sptrsv import lower_tri  # lazy: avoids import cycle
+
+        d = lower_tri(g)  # single home for the diag-last CSR convention
+        return d.n, d.ptr, d.src
+    return g.n, g.ptr, g.src
+
+
+def out_adjacency(g) -> tuple[np.ndarray, np.ndarray]:
+    """CSC-style adjacency: for each node j, the consumers i with edge j -> i.
 
     Returns (outptr [n+1], outidx [n_edges]) sorted by consumer id.
     """
-    n = mat.n
-    srcs = []
-    dsts = []
-    for i in range(n):
-        cols, _ = mat.row(i)
-        for j in cols[:-1]:
-            srcs.append(j)
-            dsts.append(i)
-    srcs = np.asarray(srcs, dtype=np.int64)
-    dsts = np.asarray(dsts, dtype=np.int64)
+    n, ptr, srcs = edge_view(g)
+    dsts = np.repeat(np.arange(n, dtype=np.int64), np.diff(ptr))
     order = np.lexsort((dsts, srcs))
-    srcs, dsts = srcs[order], dsts[order]
     outptr = np.zeros(n + 1, dtype=np.int64)
     np.cumsum(np.bincount(srcs, minlength=n), out=outptr[1:])
-    return outptr, dsts
+    return outptr, dsts[order]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,46 +80,51 @@ class DagInfo:
         }
 
 
-def compute_levels(mat: TriCSR) -> np.ndarray:
-    """Longest-path level per node (level-scheduling / Fig. 1c)."""
-    n = mat.n
+def _levels(n: int, ptr: np.ndarray, src: np.ndarray) -> np.ndarray:
     level = np.zeros(n, dtype=np.int64)
     for i in range(n):
-        cols, _ = mat.row(i)
-        off = cols[:-1]
+        off = src[ptr[i] : ptr[i + 1]]
         if len(off):
             level[i] = int(level[off].max()) + 1
     return level
 
 
-def analyze(mat: TriCSR, num_cus: int = 64, cdu_fraction: float = 0.2) -> DagInfo:
+def compute_levels(g) -> np.ndarray:
+    """Longest-path level per node (level-scheduling / Fig. 1c)."""
+    return _levels(*edge_view(g))
+
+
+def analyze(g, num_cus: int = 64, cdu_fraction: float = 0.2) -> DagInfo:
     """CDU statistics exactly as defined in the paper (§II-C, Table III).
 
     A CDU node sits in a level whose width is below ``cdu_fraction *
     num_cus`` (the paper sets the threshold at 20% of max parallelism).
     """
-    level = compute_levels(mat)
+    n, ptr, src = edge_view(g)
+    level = _levels(n, ptr, src)
     n_levels = int(level.max()) + 1
     width = np.bincount(level, minlength=n_levels)
     threshold = max(1, int(round(cdu_fraction * num_cus)))
     cdu_level = width < threshold
     is_cdu = cdu_level[level]
-    indeg = mat.in_degree()
-    total_edges = max(1, int(indeg.sum()))
+    indeg = np.diff(ptr)
+    n_edges = int(indeg.sum())
+    nnz = n_edges + n  # one final op per node (== matrix nnz for SpTRSV)
+    total_edges = max(1, n_edges)
     cdu_nodes = int(is_cdu.sum())
     cdu_edges = int(indeg[is_cdu].sum())
     return DagInfo(
-        name=mat.name,
-        n=mat.n,
-        nnz=mat.nnz,
-        binary_nodes=mat.binary_nodes,
+        name=g.name,
+        n=n,
+        nnz=nnz,
+        binary_nodes=2 * nnz - n,
         levels=level,
         n_levels=n_levels,
         level_width=width,
         cdu_threshold=threshold,
-        cdu_node_ratio=cdu_nodes / mat.n,
+        cdu_node_ratio=cdu_nodes / n,
         cdu_edge_ratio=cdu_edges / total_edges,
         cdu_level_ratio=float(cdu_level.sum()) / n_levels,
         cdu_edges_per_node=(cdu_edges / cdu_nodes) if cdu_nodes else 0.0,
-        max_in_degree=int(indeg.max()) if mat.n else 0,
+        max_in_degree=int(indeg.max()) if n else 0,
     )

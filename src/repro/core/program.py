@@ -57,6 +57,7 @@ __all__ = [
     "OP_BITS",
     "CTL_BITS",
     "SLOT_BITS",
+    "MAX_SLOT",
     "packed_planes",
     "pack_instructions",
     "decode_instructions",
@@ -85,6 +86,10 @@ _SRC_MASK = (1 << SRC_BITS) - 1
 _OP_MASK = (1 << OP_BITS) - 1
 _CTL_MASK = (1 << CTL_BITS) - 1
 _SLOT_MASK = (1 << SLOT_BITS) - 1
+
+# Largest psum slot id the packed word can carry — the compiler's overflow
+# slots grow on demand but must stop here (compiler/sched.peek_over_slot).
+MAX_SLOT = _SLOT_MASK
 
 
 def packed_planes(n: int) -> int:
@@ -222,6 +227,9 @@ class ScheduleStats:
     dm_escapes: int = 0      # emergency psum overflow parks (DESIGN.md §5)
     per_cu_edges: np.ndarray | None = None
     compile_seconds: float = 0.0
+    # per-pass observability of the staged pipeline (DESIGN.md §6): a list
+    # of `compiler.PassStats` (name, seconds, metrics) in pass order
+    pass_stats: list | None = None
 
     # -- paper metrics ---------------------------------------------------
     def flops(self) -> int:
