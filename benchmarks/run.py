@@ -23,6 +23,7 @@ from . import (
     instruction_breakdown,
     platform_comparison,
     psum_sweep,
+    robust_overhead,
     sharded_batch,
     suite_stats,
 )
@@ -40,6 +41,7 @@ MODULES = {
     "sharded": sharded_batch,
     "large_n": large_n,
     "dagwork": dag_workloads,
+    "robust": robust_overhead,
 }
 
 

@@ -30,6 +30,19 @@ Multi-device execution: pass ``mesh=`` (a `jax.sharding.Mesh`, e.g.
 columns over devices — the instruction stream is replicated, each device
 solves its own column block (`repro.core.shard`), and executors are cached
 per (program, padded per-device width, mesh).
+
+Hardened solve path (DESIGN.md §7): `save_program` / `load_program`
+round-trip a compiled `Program` through the versioned, CRC32-checksummed
+on-disk format (`core.serialize`) — a damaged blob raises
+`ProgramCorruptionError`, never executes; `verify_program` structurally
+validates any in-memory program; `robust_solver` wraps `make_solver` with
+input/output health checks and the graceful-degradation backend ladder
+(`core.robust.RobustSolver`):
+
+    api.save_program(prog, "ckt.prog")
+    prog = api.load_program("ckt.prog")          # CRC + structural verify
+    solver = api.robust_solver(prog, mat)        # checked, self-degrading
+    x = solver(b)                                # solver.last_incidents
 """
 
 from __future__ import annotations
@@ -71,6 +84,10 @@ __all__ = [
     "solve_numpy",
     "reference_solve",
     "report",
+    "save_program",
+    "load_program",
+    "verify_program",
+    "robust_solver",
     "AccelConfig",
     "Program",
     "CompiledWorkload",
@@ -269,6 +286,45 @@ def solve_upper(cw: CompiledWorkload | UpperCSR, b: np.ndarray,
 def solve_pair(pair: SolvePair, b: np.ndarray, **opts) -> np.ndarray:
     """Run one forward+backward preconditioner application through `pair`."""
     return pair.solve(b, **opts)
+
+
+def save_program(prog: Program, path) -> None:
+    """Persist a compiled program in the checksummed on-disk format
+    (`core.serialize`, DESIGN.md §7) for compile-once/serve-many reuse."""
+    from .serialize import save_program as _save
+
+    _save(prog, path)
+
+
+def load_program(path, *, verify: bool = True) -> Program:
+    """Load a program saved by `save_program`; CRC mismatches and (with
+    ``verify=True``) structural violations raise `ProgramCorruptionError`."""
+    from .serialize import load_program as _load
+
+    return _load(path, verify=verify)
+
+
+def verify_program(prog: Program) -> None:
+    """Structurally validate a compiled program (`core.robust`); raises
+    `ProgramCorruptionError` on the first violated invariant."""
+    from .robust import verify_program as _verify
+
+    _verify(prog)
+
+
+def robust_solver(prog: Program, mat: TriCSR | None = None, **opts):
+    """Health-checked solve closure with graceful degradation.
+
+    Returns a `core.robust.RobustSolver` — callable like the `make_solver`
+    closures (``solver(b)`` with ``b`` of shape ``[n]`` or ``[n, B]``) but
+    with input validation, output health checks (non-finite x, relative
+    residual against ``mat`` when retained), and the deterministic
+    fallback ladder pallas-blocked → pallas-resident → jax → numpy →
+    reference with machine-readable incident records (DESIGN.md §7).
+    """
+    from .robust import RobustSolver
+
+    return RobustSolver(prog, mat, **opts)
 
 
 def solve_numpy(prog: Program, b: np.ndarray) -> np.ndarray:

@@ -14,6 +14,8 @@ from typing import Iterable
 
 import numpy as np
 
+from .errors import MatrixValidationError
+
 __all__ = [
     "TriCSR",
     "UpperCSR",
@@ -23,6 +25,25 @@ __all__ = [
     "transpose_upper",
     "random_rhs",
 ]
+
+
+def _reject(name: str, msg: str, row: int | None = None):
+    """Raise a `MatrixValidationError` naming the matrix (and row).
+
+    Structured replacement for the historical bare ``assert``s: the checks
+    keep running under ``python -O`` and the message pinpoints the defect.
+    """
+    where = f"matrix {name!r}" + (f", row {row}" if row is not None else "")
+    raise MatrixValidationError(
+        f"{where}: {msg}",
+        detail={"matrix": name, **({"row": int(row)} if row is not None else {})},
+    )
+
+
+def _first_bad_row(rowptr: np.ndarray, mask: np.ndarray) -> int:
+    """Map a per-nnz boolean defect mask to its (first) row index."""
+    pos = int(np.argmax(mask))
+    return int(np.searchsorted(rowptr, pos, side="right") - 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,17 +73,37 @@ class TriCSR:
 
     # ------------------------------------------------------------------
     def validate(self) -> None:
-        assert self.rowptr.shape == (self.n + 1,)
-        assert self.rowptr[0] == 0
-        assert np.all(np.diff(self.rowptr) >= 1), "every row needs a diagonal"
-        for i in range(self.n):
-            lo, hi = self.rowptr[i], self.rowptr[i + 1]
-            cols = self.colidx[lo:hi]
-            assert cols[-1] == i, f"row {i}: diagonal must be stored last"
-            off = cols[:-1]
-            assert np.all(off < i), f"row {i}: super-diagonal entry"
-            assert np.all(np.diff(off) > 0), f"row {i}: unsorted/duplicate cols"
-        assert not np.any(self.values[self.rowptr[1:] - 1] == 0.0), "zero diagonal"
+        """Check the layout contract; raises `MatrixValidationError`
+        naming this matrix and the first offending row (vectorized —
+        the per-row python loop only runs to localize a failure)."""
+        rp, ci = self.rowptr, self.colidx
+        if rp.shape != (self.n + 1,) or rp[0] != 0 or ci.shape[0] != rp[-1]:
+            _reject(self.name, f"rowptr/colidx envelope broken "
+                               f"(rowptr shape {rp.shape}, nnz {ci.shape})")
+        deg = np.diff(rp)
+        if np.any(deg < 1):
+            _reject(self.name, "missing diagonal (empty row)",
+                    int(np.argmax(deg < 1)))
+        rows = np.repeat(np.arange(self.n, dtype=np.int64), deg)
+        if not np.array_equal(ci[rp[1:] - 1], np.arange(self.n)):
+            bad = int(np.argmax(ci[rp[1:] - 1] != np.arange(self.n)))
+            _reject(self.name, "diagonal must be stored last", bad)
+        off = np.ones(ci.shape[0], dtype=bool)
+        off[rp[1:] - 1] = False  # mask the diagonal slots
+        if np.any(ci[off] >= rows[off]):
+            m = np.zeros_like(off)
+            m[off] = ci[off] >= rows[off]
+            _reject(self.name, "super-diagonal entry",
+                    _first_bad_row(rp, m))
+        run = np.zeros(ci.shape[0], dtype=bool)
+        run[1:] = (np.diff(ci) <= 0) & off[1:] & off[:-1] \
+            & (rows[1:] == rows[:-1])
+        if np.any(run):
+            _reject(self.name, "unsorted/duplicate columns",
+                    _first_bad_row(rp, run))
+        if np.any(self.values[rp[1:] - 1] == 0.0):
+            _reject(self.name, "zero diagonal",
+                    int(np.argmax(self.values[rp[1:] - 1] == 0.0)))
 
     def row(self, i: int) -> tuple[np.ndarray, np.ndarray]:
         lo, hi = self.rowptr[i], self.rowptr[i + 1]
@@ -95,7 +136,10 @@ def from_coo(
     rows = np.asarray(list(rows), dtype=np.int64)
     cols = np.asarray(list(cols), dtype=np.int64)
     vals = np.asarray(list(vals), dtype=np.float64)
-    assert np.all(cols < rows), "COO part must be strictly lower triangular"
+    if np.any(cols >= rows):
+        bad = int(np.argmax(cols >= rows))
+        _reject(name, f"COO part must be strictly lower triangular "
+                      f"(entry ({rows[bad]}, {cols[bad]}))", int(rows[bad]))
     # de-duplicate (keep last) and sort row-major
     key = rows * n + cols
     order = np.argsort(key, kind="stable")
@@ -149,17 +193,36 @@ class UpperCSR:
         return self.nnz - self.n
 
     def validate(self) -> None:
-        assert self.rowptr.shape == (self.n + 1,)
-        assert self.rowptr[0] == 0
-        assert np.all(np.diff(self.rowptr) >= 1), "every row needs a diagonal"
-        for i in range(self.n):
-            lo, hi = self.rowptr[i], self.rowptr[i + 1]
-            cols = self.colidx[lo:hi]
-            assert cols[0] == i, f"row {i}: diagonal must be stored first"
-            off = cols[1:]
-            assert np.all(off > i), f"row {i}: sub-diagonal entry"
-            assert np.all(np.diff(off) > 0), f"row {i}: unsorted/duplicate cols"
-        assert not np.any(self.values[self.rowptr[:-1]] == 0.0), "zero diagonal"
+        """Mirror of `TriCSR.validate` for the upper layout (diagonal
+        first, strictly super-diagonal ascending tail); raises
+        `MatrixValidationError` naming this matrix and row."""
+        rp, ci = self.rowptr, self.colidx
+        if rp.shape != (self.n + 1,) or rp[0] != 0 or ci.shape[0] != rp[-1]:
+            _reject(self.name, f"rowptr/colidx envelope broken "
+                               f"(rowptr shape {rp.shape}, nnz {ci.shape})")
+        deg = np.diff(rp)
+        if np.any(deg < 1):
+            _reject(self.name, "missing diagonal (empty row)",
+                    int(np.argmax(deg < 1)))
+        rows = np.repeat(np.arange(self.n, dtype=np.int64), deg)
+        if not np.array_equal(ci[rp[:-1]], np.arange(self.n)):
+            bad = int(np.argmax(ci[rp[:-1]] != np.arange(self.n)))
+            _reject(self.name, "diagonal must be stored first", bad)
+        off = np.ones(ci.shape[0], dtype=bool)
+        off[rp[:-1]] = False  # mask the diagonal slots
+        if np.any(ci[off] <= rows[off]):
+            m = np.zeros_like(off)
+            m[off] = ci[off] <= rows[off]
+            _reject(self.name, "sub-diagonal entry", _first_bad_row(rp, m))
+        run = np.zeros(ci.shape[0], dtype=bool)
+        run[1:] = (np.diff(ci) <= 0) & off[1:] & off[:-1] \
+            & (rows[1:] == rows[:-1])
+        if np.any(run):
+            _reject(self.name, "unsorted/duplicate columns",
+                    _first_bad_row(rp, run))
+        if np.any(self.values[rp[:-1]] == 0.0):
+            _reject(self.name, "zero diagonal",
+                    int(np.argmax(self.values[rp[:-1]] == 0.0)))
 
     def row(self, i: int) -> tuple[np.ndarray, np.ndarray]:
         lo, hi = self.rowptr[i], self.rowptr[i + 1]

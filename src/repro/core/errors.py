@@ -1,0 +1,90 @@
+"""Structured exception taxonomy for the hardened solve path (DESIGN.md §7).
+
+Every detectable failure in the compile/serialize/execute stack maps to one
+of three families so callers (the fallback ladder in `core/robust.py`, the
+serving layer, operators reading incident records) can branch on *what went
+wrong* instead of parsing message strings:
+
+  * `ProgramCorruptionError`   — the compiled artifact itself is damaged:
+    checksum mismatch on a serialized blob, packed instruction fields out
+    of range, row-envelope metadata inconsistent with the instruction
+    words, psum slot lifetime violations, dependency-order violations.
+    A corrupted program must never be executed; re-fetch or recompile.
+  * `NumericalHealthError`     — the program is fine but the *numbers*
+    are not: NaN/Inf in the right-hand side, non-finite solution values,
+    a relative residual above tolerance.  Retrying the same backend is
+    pointless; degrading to a reference executor (or re-validating the
+    inputs) is the correct response.
+  * `BackendExecutionError`    — an execution engine failed or was asked
+    for an impossible configuration: unknown backend name, stray options,
+    an infeasible kernel placement, or a crash inside the backend.  The
+    next rung of the ladder may well succeed.
+
+Several leaves multiply inherit the historical builtin (``ValueError`` /
+``TypeError``) they replace, so pre-taxonomy callers and tests that catch
+the builtin keep working while new code catches the taxonomy — and unlike
+the bare ``assert`` validation they replace, these survive ``python -O``.
+"""
+
+from __future__ import annotations
+
+__all__ = [
+    "RobustnessError",
+    "ProgramCorruptionError",
+    "MatrixValidationError",
+    "NumericalHealthError",
+    "BackendExecutionError",
+    "UnknownBackendError",
+    "BackendOptionsError",
+    "PlacementInfeasibleError",
+]
+
+
+class RobustnessError(Exception):
+    """Base of the hardened-solve-path taxonomy (DESIGN.md §7).
+
+    ``detail`` is an optional machine-readable payload (plain dict) that
+    incident records (`robust.Incident`) carry verbatim.
+    """
+
+    def __init__(self, message: str, *, detail: dict | None = None):
+        super().__init__(message)
+        self.detail = dict(detail) if detail else {}
+
+
+class ProgramCorruptionError(RobustnessError, ValueError):
+    """A compiled `Program` (or its serialized form) failed integrity checks."""
+
+
+class MatrixValidationError(RobustnessError, ValueError):
+    """A sparse-matrix container violates its layout contract.
+
+    Raised by `TriCSR.validate` / `UpperCSR.validate` / `from_coo` with the
+    offending matrix name and row in the message (and in ``detail``), in
+    place of the historical bare ``assert``s that vanished under
+    ``python -O``.
+    """
+
+
+class NumericalHealthError(RobustnessError, ValueError):
+    """Inputs or outputs of a solve are numerically unhealthy.
+
+    Covers NaN/Inf right-hand sides, wrong input shape/dtype, non-finite
+    solution components, and relative residuals above tolerance.
+    """
+
+
+class BackendExecutionError(RobustnessError, RuntimeError):
+    """An execution backend failed, or was configured impossibly."""
+
+
+class UnknownBackendError(BackendExecutionError, ValueError):
+    """Backend name outside the supported set (``"jax"``/``"pallas"``/...)."""
+
+
+class BackendOptionsError(BackendExecutionError, TypeError):
+    """Options passed to a backend that does not accept them."""
+
+
+class PlacementInfeasibleError(BackendExecutionError, ValueError):
+    """The requested Pallas memory placement admits no valid window plan."""

@@ -301,12 +301,25 @@ def make_jax_executor(prog: Program, batch: int | None = None):
 
 
 def validate_backend(backend: str, backend_opts: dict) -> None:
-    """Shared backend-argument check for api/shard solver entry points."""
+    """Shared backend-argument check for api/shard solver entry points.
+
+    Rejections use the structured taxonomy (`core.errors`, DESIGN.md §7):
+    `UnknownBackendError` for a backend name outside the supported set,
+    `BackendOptionsError` for options a backend does not accept.  Both
+    also subclass the historical builtin (``ValueError`` / ``TypeError``)
+    they replace, so pre-taxonomy callers keep working.
+    """
+    from .errors import BackendOptionsError, UnknownBackendError
+
     if backend not in ("jax", "pallas"):
-        raise ValueError(f"unknown backend {backend!r}")
+        raise UnknownBackendError(
+            f"unknown backend {backend!r} (choose 'jax' or 'pallas')",
+            detail={"backend": backend})
     if backend == "jax" and backend_opts:
-        raise TypeError(f"backend='jax' takes no extra options, "
-                        f"got {sorted(backend_opts)}")
+        raise BackendOptionsError(
+            f"backend='jax' takes no extra options, got "
+            f"{sorted(backend_opts)}",
+            detail={"backend": backend, "options": sorted(backend_opts)})
 
 
 def make_pallas_executor(
@@ -347,11 +360,25 @@ def make_pallas_executor(
         _EXEC_CACHE[prog] = per_prog
     core = per_prog.get(key)
     if core is None:
-        core = sptrsv_ops.build_solver_cols(
-            prog, width, cycles_per_block=cycles_per_block,
-            placement=placement, vmem_limit_bytes=vmem_limit_bytes,
-            x_block_rows=x_block_rows, interpret=interpret,
-        )
+        try:
+            core = sptrsv_ops.build_solver_cols(
+                prog, width, cycles_per_block=cycles_per_block,
+                placement=placement, vmem_limit_bytes=vmem_limit_bytes,
+                x_block_rows=x_block_rows, interpret=interpret,
+            )
+        except Exception as e:
+            # surface kernel/staging construction failures as the taxonomy
+            # (DESIGN.md §7) so the fallback ladder can classify and
+            # degrade; taxonomy leaves (e.g. an infeasible placement) pass
+            # through untouched
+            from .errors import BackendExecutionError, RobustnessError
+
+            if isinstance(e, RobustnessError):
+                raise
+            raise BackendExecutionError(
+                f"pallas solver construction failed "
+                f"({type(e).__name__}: {e})",
+                detail={"placement": placement, "width": width}) from e
         per_prog[key] = core
     n = prog.n
     if batch is None:

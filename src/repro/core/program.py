@@ -337,6 +337,32 @@ class Program:
         op, src, _, _ = self._decoded()
         return np.where(op == OP_FINAL, src, self.n).astype(np.int32)
 
+    # -- integrity hooks (DESIGN.md §7) -------------------------------------
+    def validate_fields(self) -> None:
+        """Re-check every decoded field against its packed bit width.
+
+        Method form of the module-level `validate_fields`, run over this
+        program's own words — the first line of defence of the structural
+        validator (`core.robust.verify_program`), which wraps the raised
+        ``ValueError`` into a `ProgramCorruptionError`.
+        """
+        op, src, ctl, slot = decode_instructions(self.instr, self.planes)
+        validate_fields(op, src, ctl, slot, self.planes)
+
+    def content_crc32(self) -> int:
+        """CRC32 fingerprint of the executable content (instr/val_idx/stream).
+
+        Stable across processes for bit-identical programs — the cheap
+        identity the serving cache and the serialized format
+        (`core.serialize`) key integrity on.
+        """
+        import zlib
+
+        crc = 0
+        for arr in (self.instr, self.val_idx, self.stream):
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes(), crc)
+        return crc
+
     # -- instruction-traffic accounting ------------------------------------
     def instr_bytes_per_lane_cycle(self) -> int:
         """Streamed instruction bytes per lane per emitted cycle.

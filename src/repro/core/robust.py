@@ -1,0 +1,639 @@
+"""Hardened solve path: program integrity, numerical health, degradation.
+
+Three layers over the existing compile/execute stack (DESIGN.md §7):
+
+  * `verify_program` — a structural validator for compiled `Program`s.
+    Everything the executors *assume* about an instruction stream is
+    checked explicitly: packed-field ranges (`program.validate_fields`),
+    zero-word NOP lanes, value-index bounds, finite stream values with
+    non-zero FINAL reciprocals, psum slot capacity and slot *lifetimes*
+    (a LOAD/SWAP must read a slot a previous STORE/SWAP filled), each
+    solution row finalized exactly once, dependency order (no EDGE reads
+    an x[src] not FINAL-written in a strictly earlier cycle), and the
+    row-envelope metadata (``row_lo/row_hi``) re-derived from the words
+    it summarizes.  Any violation is a `ProgramCorruptionError`.
+  * `RobustSolver` — a health-checked wrapper over `api.make_solver`:
+    input validation (shape, dtype, NaN/Inf in b), output checks
+    (non-finite x, relative residual ``max|Lx-b| / max|b|`` against the
+    retained `TriCSR`), and a deterministic fallback ladder
+    pallas-blocked → pallas-resident → jax → numpy → reference with
+    bounded per-stage retries, an optional per-stage deadline on an
+    injectable clock, and machine-readable `Incident` records of what
+    degraded and why.
+  * `FaultInjector` + `run_fault_injection` — a seeded fault-injection
+    harness (instruction-word bit flips, value-plane and serialized-blob
+    corruption, poisoned right-hand sides, psum-slot rewrites) used by
+    the test suite and `benchmarks/robust_overhead.py --smoke` to prove
+    every fault class is either *detected* or *safely degraded* — never
+    a silent wrong answer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from .csr import TriCSR, serial_solve
+from .errors import (
+    BackendExecutionError,
+    NumericalHealthError,
+    ProgramCorruptionError,
+    RobustnessError,
+)
+from .executor import _psum_slots, as_batch, execute_numpy, make_pallas_executor, make_jax_executor
+from .program import (
+    OP_EDGE,
+    OP_FINAL,
+    OP_NOP,
+    PS_LOAD,
+    PS_STORE_RESET,
+    PS_SWAP,
+    Program,
+    decode_instructions,
+    validate_fields,
+)
+
+__all__ = [
+    "verify_program",
+    "Incident",
+    "RobustSolver",
+    "FaultInjector",
+    "run_fault_injection",
+    "csr_matvec",
+    "relative_residual",
+    "LADDER",
+    "FAULT_CLASSES",
+]
+
+# The deterministic degradation order.  A requested backend enters the
+# ladder at its own rung and degrades rightward; "reference" (a direct
+# serial solve from the retained TriCSR, independent of the compiled
+# program) is only available when the solver retains the matrix.
+LADDER = ("pallas-blocked", "pallas-resident", "jax", "numpy", "reference")
+_ENTRY = {"pallas": 0, "jax": 2, "numpy": 3}
+
+
+def _fail(msg: str, **detail) -> ProgramCorruptionError:
+    return ProgramCorruptionError(f"program integrity: {msg}", detail=detail)
+
+
+def verify_program(prog: Program) -> None:
+    """Structurally validate a compiled `Program` (see module docstring).
+
+    Raises `ProgramCorruptionError` naming the first violated invariant;
+    returns None on a clean program.  Pure numpy, no executor is touched —
+    safe to run on untrusted/deserialized programs before any solve.
+    """
+    instr = np.asarray(prog.instr)
+    if instr.ndim != 3 or instr.dtype != np.int32:
+        raise _fail(f"instr must be [T, planes, P] int32, got "
+                    f"{instr.shape} {instr.dtype}")
+    t, planes, p = instr.shape
+    if planes not in (1, 2):
+        raise _fail(f"planes must be 1 or 2, got {planes}")
+    vidx = np.asarray(prog.val_idx)
+    if vidx.shape != (t, p):
+        raise _fail(f"val_idx shape {vidx.shape} != instr rows {(t, p)}")
+    stream = np.asarray(prog.stream)
+    if stream.ndim != 1:
+        raise _fail(f"stream must be 1-D, got shape {stream.shape}")
+    if not np.isfinite(stream).all():
+        bad = int(np.count_nonzero(~np.isfinite(stream)))
+        raise _fail(f"stream carries {bad} non-finite value(s)",
+                    non_finite=bad)
+    if vidx.size and (vidx.min() < 0 or vidx.max() >= stream.size):
+        raise _fail(f"val_idx out of stream bounds [0, {stream.size})",
+                    lo=int(vidx.min()), hi=int(vidx.max()))
+
+    op, src, ctl, slot = decode_instructions(instr, planes)
+    try:
+        validate_fields(op, src, ctl, slot, planes)
+    except ValueError as e:
+        raise _fail(f"packed field range: {e}") from e
+    if int(op.max(initial=0)) > OP_FINAL:
+        raise _fail(f"invalid opcode {int(op.max())} (beyond OP_FINAL)")
+    if int(ctl.max(initial=0)) > PS_SWAP:
+        raise _fail(f"invalid psum control {int(ctl.max())} (beyond PS_SWAP)")
+
+    active = op != OP_NOP
+    # NOP lanes are all-zero words by construction (pad rows, elided
+    # lanes); a non-zero NOP word means bits were flipped into fields the
+    # executor still applies (the psum control runs on every lane).
+    nop_nonzero = (~active) & (instr != 0).any(axis=1)
+    if nop_nonzero.any():
+        tt, pp = np.argwhere(nop_nonzero)[0]
+        raise _fail(f"NOP lane carries a non-zero word at cycle {tt}, "
+                    f"cu {pp}", cycle=int(tt), cu=int(pp))
+    if active.any() and int(src[active].max()) >= prog.n:
+        raise _fail(f"active lane reads row >= n={prog.n}",
+                    row=int(src[active].max()))
+
+    nslots = _psum_slots(prog)
+    uses_slot = (ctl == PS_LOAD) | (ctl == PS_STORE_RESET) | (ctl == PS_SWAP)
+    if uses_slot.any() and int(slot[uses_slot].max()) >= nslots:
+        raise _fail(f"psum slot {int(slot[uses_slot].max())} >= register "
+                    f"file size {nslots}", num_slots=nslots)
+
+    # every solution row finalized exactly once
+    finals = src[op == OP_FINAL]
+    counts = np.bincount(finals, minlength=prog.n) if finals.size else \
+        np.zeros(prog.n, dtype=np.int64)
+    if finals.size != prog.n or (counts != 1).any():
+        row = int(np.argmax(counts != 1))
+        raise _fail(f"row {row} finalized {int(counts[row])} times "
+                    f"(every row must be finalized exactly once)", row=row)
+
+    # dependency order: EDGE at cycle t reads x[src] => src FINAL'd at
+    # some cycle < t
+    cyc = np.broadcast_to(np.arange(t)[:, None], (t, p))
+    final_cycle = np.full(prog.n, t, dtype=np.int64)
+    final_cycle[finals] = cyc[op == OP_FINAL]
+    edges = op == OP_EDGE
+    if edges.any():
+        viol = final_cycle[src[edges]] >= cyc[edges]
+        if viol.any():
+            k = int(np.argmax(viol))
+            row = int(src[edges][k])
+            raise _fail(
+                f"dependency order: an EDGE reads x[{row}] at cycle "
+                f"{int(cyc[edges][k])} but row {row} is finalized at cycle "
+                f"{int(final_cycle[row])}", row=row)
+
+    # FINAL stream values are diagonal reciprocals — zero would divide out
+    if (op == OP_FINAL).any():
+        fvals = stream[vidx[op == OP_FINAL]]
+        if (fvals == 0).any():
+            raise _fail("FINAL lane carries a zero diagonal reciprocal")
+
+    # psum slot lifetimes, per CU: LOAD/SWAP read a live slot; STORE/SWAP
+    # fill it; LOAD consumes it.  Iterate psum events only (sparse).
+    ev_t, ev_p = np.nonzero(ctl)
+    order = np.lexsort((ev_t, ev_p))
+    live: set[tuple[int, int]] = set()
+    for k in order:
+        c, s, pp, tt = int(ctl[ev_t[k], ev_p[k]]), int(slot[ev_t[k], ev_p[k]]), int(ev_p[k]), int(ev_t[k])
+        key = (pp, s)
+        if c in (PS_LOAD, PS_SWAP) and key not in live:
+            raise _fail(f"psum lifetime: cu {pp} reads slot {s} at cycle "
+                        f"{tt} before any store", cu=pp, slot=s, cycle=tt)
+        if c in (PS_STORE_RESET, PS_SWAP):
+            live.add(key)
+        elif c == PS_LOAD:
+            live.discard(key)
+
+    # row-envelope metadata re-derived from the words it summarizes
+    if prog.row_lo is not None and prog.row_hi is not None:
+        lo = np.where(active, src, prog.n).min(axis=1).astype(np.int32)
+        hi = np.where(active, src, -1).max(axis=1).astype(np.int32)
+        if not (np.array_equal(lo, prog.row_lo)
+                and np.array_equal(hi, prog.row_hi)):
+            bad = int(np.argmax((lo != prog.row_lo) | (hi != prog.row_hi)))
+            raise _fail(f"row-envelope metadata inconsistent with the "
+                        f"instruction words at cycle {bad}", cycle=bad)
+
+
+# ---------------------------------------------------------------------------
+# numerical health helpers
+# ---------------------------------------------------------------------------
+def csr_matvec(mat: TriCSR, x: np.ndarray) -> np.ndarray:
+    """``L @ x`` for the retained CSR; ``x`` is ``[n]`` or ``[n, B]``."""
+    prod = mat.values[:, None] * np.asarray(x, dtype=np.float64)[mat.colidx]
+    return np.add.reduceat(prod, mat.rowptr[:-1].astype(np.intp), axis=0)
+
+
+def _matvec_fn(mat: TriCSR):
+    """``x -> L @ x`` closure: scipy's C matvec when the host has scipy
+    (an order of magnitude faster on the per-solve residual check),
+    `csr_matvec` otherwise."""
+    try:
+        import scipy.sparse as sp
+    except ImportError:  # pragma: no cover - container ships scipy
+        return lambda x: csr_matvec(mat, x)
+    a = sp.csr_matrix((mat.values, mat.colidx, mat.rowptr),
+                      shape=(mat.n, mat.n))
+    return lambda x: a @ x
+
+
+def _relative_residual(matvec, x: np.ndarray, b: np.ndarray) -> float:
+    xm, _ = as_batch(np.asarray(x, dtype=np.float64))
+    bm, _ = as_batch(np.asarray(b, dtype=np.float64))
+    num = np.abs(matvec(xm) - bm).max()
+    den = max(np.abs(bm).max(), np.finfo(np.float64).tiny)
+    return float(num / den)
+
+
+def relative_residual(mat: TriCSR, x: np.ndarray, b: np.ndarray) -> float:
+    """``max|Lx - b| / max|b|`` over all RHS columns (∞-norm, relative)."""
+    return _relative_residual(_matvec_fn(mat), x, b)
+
+
+@dataclasses.dataclass(frozen=True)
+class Incident:
+    """One machine-readable degradation/detection event of a `RobustSolver`."""
+
+    stage: str          # ladder rung ("pallas-blocked", ..., "reference")
+    kind: str           # "exception" | "nonfinite-output" | "residual"
+                        # | "deadline" | "build-failed" | "input"
+    message: str
+    error: str = ""     # exception class name, "" for health-check events
+    attempt: int = 1
+    elapsed_s: float = 0.0
+    detail: dict = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class RobustSolver:
+    """Health-checked, gracefully degrading solve wrapper (DESIGN.md §7).
+
+    ``prog`` is the compiled program; ``mat`` (optional but recommended)
+    is the `TriCSR` it was compiled from — retaining it enables the
+    relative-residual output check and the final "reference" ladder rung,
+    which solves directly from the CSR and therefore returns a *correct*
+    answer even when the program itself is corrupt.
+
+    Parameters
+    ----------
+    backend : entry rung — "pallas" starts at pallas-blocked, "jax"
+        (default) at the `lax.scan` executor, "numpy" at the oracle.
+    verify : run `verify_program` once at construction (default True).
+    check_inputs / check_outputs : per-solve health checks (default on).
+    residual_tol : relative ∞-norm residual threshold (needs ``mat``);
+        ``None`` disables the residual check.
+    max_retries : extra attempts per rung after an *exception* (health
+        failures are deterministic and never retried).
+    stage_deadline_s : wall-clock budget per rung, measured on ``clock``;
+        a rung that exceeds it is recorded and disabled for subsequent
+        solves.  ``None`` (default) disables deadlines.
+    clock : injectable monotonic clock (seconds), for deterministic tests.
+    backend_opts : forwarded to the Pallas rungs (``cycles_per_block``,
+        ``vmem_limit_bytes``, ``interpret``, ...).
+
+    Solves accept ``b`` of shape ``[n]`` or ``[n, B]``.  Every detection
+    and degradation appends an `Incident` to ``last_incidents`` (per
+    solve) and ``incidents`` (lifetime); a solve that exhausts the ladder
+    raises the classified exception with the incident trail attached to
+    ``.detail["incidents"]``.
+    """
+
+    def __init__(self, prog: Program, mat: TriCSR | None = None, *,
+                 backend: str = "jax", verify: bool = True,
+                 check_inputs: bool = True, check_outputs: bool = True,
+                 residual_tol: float | None = 1e-3, max_retries: int = 1,
+                 stage_deadline_s: float | None = None,
+                 clock=time.perf_counter, ladder: tuple[str, ...] | None = None,
+                 **backend_opts):
+        if backend not in _ENTRY:
+            from .errors import UnknownBackendError
+
+            raise UnknownBackendError(
+                f"unknown backend {backend!r} (choose from "
+                f"{sorted(_ENTRY)})")
+        if verify:
+            verify_program(prog)
+        self.prog = prog
+        self.mat = mat
+        self.check_inputs = check_inputs
+        self.check_outputs = check_outputs
+        self.residual_tol = residual_tol if mat is not None else None
+        self.max_retries = max(0, int(max_retries))
+        self.stage_deadline_s = stage_deadline_s
+        self.clock = clock
+        self.backend_opts = dict(backend_opts)
+        stages = ladder if ladder is not None else LADDER[_ENTRY[backend]:]
+        if mat is None:
+            stages = tuple(s for s in stages if s != "reference")
+        self.ladder = tuple(stages)
+        self._matvec = None if mat is None else _matvec_fn(mat)
+        self._disabled: set[str] = set()
+        self._solvers: dict[tuple, object] = {}
+        self.incidents: list[Incident] = []
+        self.last_incidents: list[Incident] = []
+        self.last_stage: str = ""  # rung that produced the last answer
+
+    # -- stage plumbing ----------------------------------------------------
+    def _solver_for(self, stage: str, batch: int | None):
+        key = (stage, batch)
+        fn = self._solvers.get(key)
+        if fn is not None:
+            return fn
+        if stage == "pallas-blocked":
+            fn = make_pallas_executor(self.prog, batch=batch,
+                                      placement="blocked",
+                                      **self.backend_opts)
+        elif stage == "pallas-resident":
+            fn = make_pallas_executor(self.prog, batch=batch,
+                                      placement="resident",
+                                      **self.backend_opts)
+        elif stage == "jax":
+            fn = make_jax_executor(self.prog, batch=batch)
+        elif stage == "numpy":
+            fn = lambda b: execute_numpy(self.prog, b)  # noqa: E731
+        elif stage == "reference":
+            mat = self.mat
+
+            def fn(b):
+                bm, single = as_batch(np.asarray(b, dtype=np.float64))
+                x = np.stack([serial_solve(mat, bm[:, j])
+                              for j in range(bm.shape[1])], axis=1)
+                return x[:, 0] if single else x
+        else:
+            raise ValueError(f"unknown ladder stage {stage!r}")
+        self._solvers[key] = fn
+        return fn
+
+    def _record(self, stage: str, kind: str, message: str, *, error: str = "",
+                attempt: int = 1, elapsed_s: float = 0.0,
+                detail: dict | None = None) -> Incident:
+        inc = Incident(stage=stage, kind=kind, message=message, error=error,
+                       attempt=attempt, elapsed_s=float(elapsed_s),
+                       detail=dict(detail or {}))
+        self.last_incidents.append(inc)
+        self.incidents.append(inc)
+        return inc
+
+    # -- health checks -----------------------------------------------------
+    def residual(self, x: np.ndarray, b: np.ndarray) -> float:
+        """Relative ∞-norm residual via the solver's cached CSR matvec."""
+        if self._matvec is None:
+            raise ValueError("residual check needs the retained TriCSR "
+                             "(construct with mat=...)")
+        return _relative_residual(self._matvec, x, b)
+
+    def _check_input(self, b: np.ndarray) -> np.ndarray:
+        try:
+            b = np.asarray(b, dtype=np.float64)
+        except (TypeError, ValueError) as e:
+            raise NumericalHealthError(
+                f"right-hand side not numeric: {e}") from e
+        if b.ndim not in (1, 2) or b.shape[0] != self.prog.n:
+            raise NumericalHealthError(
+                f"right-hand side must be [n] or [n, B] with n={self.prog.n},"
+                f" got shape {b.shape}", detail={"shape": list(b.shape)})
+        bad = ~np.isfinite(b)
+        if bad.any():
+            idx = np.argwhere(bad)[0]
+            raise NumericalHealthError(
+                f"right-hand side carries {int(bad.sum())} non-finite "
+                f"entr{'y' if bad.sum() == 1 else 'ies'} (first at "
+                f"index {tuple(int(i) for i in idx)})",
+                detail={"non_finite": int(bad.sum())})
+        return b
+
+    def _check_output(self, x: np.ndarray, b: np.ndarray, stage: str,
+                      elapsed: float) -> bool:
+        xa = np.asarray(x)
+        if not np.isfinite(xa).all():
+            self._record(stage, "nonfinite-output",
+                         f"{int(np.count_nonzero(~np.isfinite(xa)))} "
+                         f"non-finite solution component(s)",
+                         elapsed_s=elapsed)
+            return False
+        if self.check_outputs and self.residual_tol is not None:
+            rel = self.residual(xa, b)
+            if not rel <= self.residual_tol:
+                self._record(stage, "residual",
+                             f"relative residual {rel:.3e} exceeds "
+                             f"tolerance {self.residual_tol:.1e}",
+                             elapsed_s=elapsed, detail={"residual": rel})
+                return False
+        return True
+
+    # -- the solve ---------------------------------------------------------
+    def solve(self, b: np.ndarray) -> np.ndarray:
+        """Solve Lx=b through the ladder; see class docstring."""
+        self.last_incidents = []
+        if self.check_inputs:
+            b = self._check_input(b)
+        else:
+            b = np.asarray(b, dtype=np.float64)
+        single = b.ndim == 1
+        batch = None if single else b.shape[1]
+
+        for stage in self.ladder:
+            if stage in self._disabled:
+                continue
+            try:
+                solver = self._solver_for(stage, batch)
+            except Exception as e:  # placement infeasible, build failure
+                self._record(stage, "build-failed", str(e),
+                             error=type(e).__name__)
+                self._disabled.add(stage)
+                continue
+            for attempt in range(1, self.max_retries + 2):
+                t0 = self.clock()
+                try:
+                    x = np.asarray(solver(b.astype(np.float64)
+                                          if stage in ("numpy", "reference")
+                                          else b))
+                except Exception as e:
+                    self._record(stage, "exception", str(e),
+                                 error=type(e).__name__, attempt=attempt,
+                                 elapsed_s=self.clock() - t0)
+                    continue  # bounded retry of the same rung
+                elapsed = self.clock() - t0
+                if (self.stage_deadline_s is not None
+                        and elapsed > self.stage_deadline_s):
+                    self._record(stage, "deadline",
+                                 f"stage took {elapsed:.3f}s > deadline "
+                                 f"{self.stage_deadline_s:.3f}s",
+                                 attempt=attempt, elapsed_s=elapsed)
+                    self._disabled.add(stage)
+                    break  # degrade; do not trust an over-deadline rung
+                if not self.check_outputs:
+                    self.last_stage = stage
+                    return x
+                if self._check_output(x, b, stage, elapsed):
+                    self.last_stage = stage
+                    return x
+                break  # health failures are deterministic: degrade
+
+        trail = [i.to_dict() for i in self.last_incidents]
+        kinds = {i.kind for i in self.last_incidents}
+        msg = (f"all ladder stages failed for n={self.prog.n} solve "
+               f"({len(trail)} incident(s); stages {list(self.ladder)})")
+        if kinds & {"nonfinite-output", "residual"}:
+            raise NumericalHealthError(msg, detail={"incidents": trail})
+        raise BackendExecutionError(msg, detail={"incidents": trail})
+
+    __call__ = solve
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+FAULT_CLASSES = ("instr_bit_flip", "psum_slot", "value_plane_nan",
+                 "value_plane_scale", "blob", "rhs_nan", "rhs_inf")
+
+
+def _copy_program(prog: Program) -> Program:
+    return dataclasses.replace(
+        prog,
+        instr=prog.instr.copy(),
+        val_idx=prog.val_idx.copy(),
+        stream=prog.stream.copy(),
+        row_lo=None if prog.row_lo is None else prog.row_lo.copy(),
+        row_hi=None if prog.row_hi is None else prog.row_hi.copy(),
+    )
+
+
+class FaultInjector:
+    """Seeded fault source for the robustness test suite (DESIGN.md §7).
+
+    Every method returns a *new* corrupted object; the input is never
+    mutated.  The generator is owned by the injector, so a fixed seed
+    yields a reproducible fault sequence across runs.
+    """
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+
+    def flip_instr_bits(self, prog: Program, flips: int = 1) -> Program:
+        """Flip ``flips`` random bits in the packed instruction words."""
+        out = _copy_program(prog)
+        flat = out.instr.reshape(-1)
+        for _ in range(flips):
+            i = int(self.rng.integers(flat.size))
+            bit = int(self.rng.integers(31))  # the packed fields' bits
+            flat[i] = np.int32(int(flat[i]) ^ (1 << bit))
+        return out
+
+    def corrupt_slots(self, prog: Program, k: int = 1) -> Program:
+        """Rewrite the psum-slot field of ``k`` random slot-using lanes.
+
+        Targets lanes whose control actually reads or writes the slot
+        (LOAD / STORE_RESET / SWAP — a RESET lane's slot field is dead);
+        programs with no such traffic are returned unchanged.
+        """
+        out = _copy_program(prog)
+        op, src, ctl, slot = decode_instructions(out.instr, out.planes)
+        ev = np.argwhere((ctl == PS_LOAD) | (ctl == PS_STORE_RESET)
+                         | (ctl == PS_SWAP))
+        if not ev.size:
+            return out
+        from .program import pack_instructions
+
+        slot = slot.copy()
+        for _ in range(k):
+            t, p = ev[int(self.rng.integers(len(ev)))]
+            slot[t, p] = int(self.rng.integers(256))
+        out.instr = pack_instructions(op, src, ctl, slot, planes=out.planes)
+        return out
+
+    def corrupt_stream(self, prog: Program, k: int = 1,
+                       mode: str = "nan") -> Program:
+        """Corrupt ``k`` entries of the value plane (``mode``: nan|scale)."""
+        out = _copy_program(prog)
+        idx = self.rng.integers(out.stream.size, size=k)
+        if mode == "nan":
+            out.stream[idx] = np.nan
+        elif mode == "scale":
+            out.stream[idx] = out.stream[idx] * 64.0 + 1.5
+        else:
+            raise ValueError(f"unknown stream corruption mode {mode!r}")
+        return out
+
+    def corrupt_blob(self, blob: bytes, k: int = 1) -> bytes:
+        """XOR ``k`` random bytes of a serialized blob with non-zero junk."""
+        buf = bytearray(blob)
+        for _ in range(k):
+            i = int(self.rng.integers(len(buf)))
+            buf[i] ^= int(self.rng.integers(1, 256))
+        return bytes(buf)
+
+    def poison_rhs(self, b: np.ndarray, k: int = 1,
+                   value: float = np.nan) -> np.ndarray:
+        """Plant ``k`` non-finite entries in a right-hand side."""
+        out = np.array(b, dtype=np.float64, copy=True)
+        flat = out.reshape(-1)
+        flat[self.rng.integers(flat.size, size=k)] = value
+        return out
+
+
+def run_fault_injection(mat: TriCSR, prog: Program | None = None, *,
+                        trials_per_class: int = 3, seed: int = 0,
+                        residual_tol: float = 1e-3,
+                        classes: tuple[str, ...] = FAULT_CLASSES) -> list[dict]:
+    """Inject every fault class and record how the stack responds.
+
+    Returns one dict per trial: ``fault``, ``trial``, ``detected`` (which
+    layer caught it: "verify" / "load" / "input" / "health" / "none"),
+    ``degraded_to`` (the ladder rung that produced the returned answer,
+    "" when the solve raised), and ``silent_wrong`` — True only when
+    nothing detected anything AND the returned answer fails the residual
+    check.  The acceptance bar is ``not any(r["silent_wrong"])``.
+    """
+    from . import serialize
+    from .schedule import compile_program
+
+    if prog is None:
+        prog = compile_program(mat)
+    inj = FaultInjector(seed)
+    rng = np.random.default_rng(seed + 1)
+    results = []
+
+    def solve_outcome(bad_prog, b):
+        """Solve a (possibly corrupt) program under full health checks."""
+        rs = RobustSolver(bad_prog, mat, backend="jax", verify=False,
+                          residual_tol=residual_tol)
+        try:
+            x = rs.solve(b)
+        except RobustnessError:
+            return "health", "", True  # detected by raising: not silent
+        degraded = rs.last_stage if rs.last_incidents else ""
+        detected = "health" if rs.last_incidents else "none"
+        ok = relative_residual(mat, x, b) <= residual_tol
+        return detected, degraded, ok
+
+    for fault in classes:
+        for trial in range(trials_per_class):
+            b = rng.standard_normal(mat.n)
+            detected, degraded, ok = "none", "", True
+            if fault in ("instr_bit_flip", "psum_slot"):
+                bad = (inj.flip_instr_bits(prog, flips=1)
+                       if fault == "instr_bit_flip"
+                       else inj.corrupt_slots(prog, k=1))
+                try:
+                    verify_program(bad)
+                except ProgramCorruptionError:
+                    detected = "verify"
+                else:
+                    detected, degraded, ok = solve_outcome(bad, b)
+            elif fault in ("value_plane_nan", "value_plane_scale"):
+                mode = "nan" if fault.endswith("nan") else "scale"
+                bad = inj.corrupt_stream(prog, k=2, mode=mode)
+                try:
+                    verify_program(bad)
+                except ProgramCorruptionError:
+                    detected = "verify"
+                else:
+                    detected, degraded, ok = solve_outcome(bad, b)
+            elif fault == "blob":
+                blob = serialize.dumps_program(prog)
+                try:
+                    serialize.loads_program(inj.corrupt_blob(blob, k=3))
+                except ProgramCorruptionError:
+                    detected = "load"
+                else:  # pragma: no cover - CRC collision would be news
+                    detected = "none"
+            elif fault in ("rhs_nan", "rhs_inf"):
+                val = np.nan if fault == "rhs_nan" else np.inf
+                rs = RobustSolver(prog, mat, backend="jax", verify=False,
+                                  residual_tol=residual_tol)
+                try:
+                    rs.solve(inj.poison_rhs(b, k=2, value=val))
+                except NumericalHealthError:
+                    detected = "input"
+            else:  # pragma: no cover
+                raise ValueError(f"unknown fault class {fault!r}")
+            results.append({
+                "fault": fault,
+                "trial": trial,
+                "detected": detected,
+                "degraded_to": degraded,
+                "silent_wrong": bool(detected == "none" and not ok),
+            })
+    return results

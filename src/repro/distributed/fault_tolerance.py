@@ -14,6 +14,12 @@ Straggler policy follows the "tolerate, don't block" approach: per-step
 durations are tracked per host; hosts slower than `factor` x the rolling
 median for `patience` consecutive steps are flagged, first for data-shard
 rebalancing, then for eviction (treated as a failure).
+
+Both classes are clock-injectable: every timestamp flows through the
+``clock`` callable handed to the constructor (default ``time.monotonic``)
+or through explicit ``at=`` arguments — no wall-clock call sits inside the
+decision logic, so the timeout and eviction paths are deterministically
+unit-testable with a fake clock (`tests/test_fault_tolerance.py`).
 """
 
 from __future__ import annotations
@@ -52,9 +58,13 @@ class HeartbeatMonitor:
         self._failed.update(newly)
         return newly
 
-    def rejoin(self, host: int) -> None:
+    def rejoin(self, host: int, at: float | None = None) -> None:
         self._failed.discard(host)
-        self._last[host] = self._clock()
+        self._last[host] = self._clock() if at is None else at
+
+    def last_seen(self, host: int) -> float:
+        """Timestamp of the host's most recent heartbeat (clock domain)."""
+        return self._last[host]
 
     @property
     def healthy(self) -> list[int]:
@@ -69,20 +79,31 @@ class HeartbeatMonitor:
 class StragglerVerdict:
     rebalance: list[int]   # slow: shift data share away
     evict: list[int]       # hopeless: treat as failed
+    at: float = 0.0        # verdict timestamp (policy clock domain)
 
 
 class StragglerPolicy:
-    """Rolling-median step-time policy with hysteresis."""
+    """Rolling-median step-time policy with hysteresis.
+
+    ``clock`` only stamps verdicts for incident records — the flag/evict
+    decisions depend purely on the recorded step durations, so the policy
+    is deterministic under any clock.
+    """
 
     def __init__(self, factor: float = 1.5, patience: int = 5,
-                 window: int = 50, evict_factor: float = 3.0):
+                 window: int = 50, evict_factor: float = 3.0,
+                 clock=time.monotonic):
         self.factor = factor
         self.evict_factor = evict_factor
         self.patience = patience
+        self._clock = clock
         self._times: dict[int, deque] = defaultdict(lambda: deque(maxlen=window))
         self._strikes: dict[int, int] = defaultdict(int)
 
-    def record_step(self, durations: dict[int, float]) -> StragglerVerdict:
+    def record_step(self, durations: dict[int, float],
+                    at: float | None = None) -> StragglerVerdict:
+        if not durations:
+            raise ValueError("record_step needs at least one host duration")
         med = sorted(durations.values())[len(durations) // 2]
         rebalance, evict = [], []
         for h, d in durations.items():
@@ -97,7 +118,8 @@ class StragglerPolicy:
                 evict.append(h)
             elif self._strikes[h] >= self.patience:
                 rebalance.append(h)
-        return StragglerVerdict(rebalance=rebalance, evict=evict)
+        return StragglerVerdict(rebalance=rebalance, evict=evict,
+                                at=self._clock() if at is None else at)
 
     def host_share(self, hosts: list[int], flagged: list[int],
                    discount: float = 0.5) -> dict[int, float]:

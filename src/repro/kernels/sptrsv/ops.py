@@ -34,6 +34,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.errors import PlacementInfeasibleError
 from repro.core.executor import _psum_slots, as_batch
 from repro.core.program import Program, decode_instructions
 
@@ -169,7 +170,12 @@ def resolve_placement(
     plan = plan_window(prog, cycles_per_block, min_window=x_block_rows)
     if placement == "blocked":
         if not plan.feasible:
-            raise ValueError(f"row-blocked placement infeasible: {plan.reason}")
+            # taxonomy leaf (DESIGN.md §7); still a ValueError for
+            # pre-taxonomy callers, and the fallback ladder treats it as
+            # "this rung cannot serve this program" and degrades
+            raise PlacementInfeasibleError(
+                f"row-blocked placement infeasible: {plan.reason}",
+                detail={"reason": plan.reason})
         return "blocked", plan
     resident_bytes = 2 * (prog.n + 1) * nb * 4
     if resident_bytes <= vmem_limit_bytes or not plan.feasible:

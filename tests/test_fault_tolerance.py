@@ -1,0 +1,108 @@
+"""Deterministic fault-tolerance control-plane tests (DESIGN.md §7).
+
+`HeartbeatMonitor` / `StragglerPolicy` are clock-injectable — no wall
+clock in the decision logic — so the timeout, rejoin, and straggler
+rebalance/eviction paths are driven here entirely by a fake clock and
+fixed duration streams (referenced from
+`distributed/fault_tolerance.py`'s module docstring).
+"""
+
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.distributed import HeartbeatMonitor, StragglerPolicy
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+# ------------------------------------------------------------ heartbeats
+def test_timeout_boundary_is_strict():
+    clk = FakeClock()
+    mon = HeartbeatMonitor([0, 1], timeout_s=10.0, clock=clk)
+    clk.t = 10.0
+    assert mon.check() == []          # exactly at timeout: still alive
+    clk.t = 10.0 + 1e-9
+    assert mon.check() == [0, 1]      # strictly beyond: failed
+    assert mon.healthy == [] and mon.failed == [0, 1]
+
+
+def test_beat_with_explicit_timestamp():
+    clk = FakeClock()
+    mon = HeartbeatMonitor([0, 1], timeout_s=5.0, clock=clk)
+    mon.beat(0, at=8.0)               # timestamp from a remote report
+    clk.t = 12.0
+    assert mon.check() == [1]
+    assert mon.last_seen(0) == 8.0
+    assert mon.check(at=14.0) == [0]  # explicit-now path
+
+
+def test_failed_host_beats_ignored_until_rejoin():
+    clk = FakeClock()
+    mon = HeartbeatMonitor([0], timeout_s=1.0, clock=clk)
+    clk.t = 5.0
+    assert mon.check() == [0]
+    mon.beat(0)                       # zombie heartbeat: must not revive
+    assert mon.failed == [0]
+    mon.rejoin(0, at=5.5)
+    assert mon.healthy == [0] and mon.last_seen(0) == 5.5
+    assert mon.check(at=6.0) == []    # fresh lease after rejoin
+
+
+def test_repeated_check_reports_each_failure_once():
+    clk = FakeClock()
+    mon = HeartbeatMonitor([0, 1], timeout_s=1.0, clock=clk)
+    clk.t = 2.0
+    assert mon.check() == [0, 1]
+    clk.t = 3.0
+    assert mon.check() == []          # newly-failed only, no re-reports
+
+
+# ------------------------------------------------------------ stragglers
+def test_eviction_path_is_deterministic():
+    pol = StragglerPolicy(factor=1.5, patience=2, evict_factor=3.0,
+                          clock=FakeClock(42.0))
+    healthy = {0: 1.0, 1: 1.0, 2: 1.0}
+    v1 = pol.record_step({**healthy, 3: 10.0})   # > evict_factor: +2 strikes
+    assert v1.rebalance == [3] and v1.evict == [] and v1.at == 42.0
+    v2 = pol.record_step({**healthy, 3: 10.0})   # 4 strikes == 2*patience
+    assert v2.evict == [3]
+
+
+def test_rebalance_before_eviction_and_recovery():
+    pol = StragglerPolicy(factor=1.5, patience=2, clock=FakeClock())
+    healthy = {0: 1.0, 1: 1.0, 2: 1.0}
+    for _ in range(2):                           # mild slowness: +1/step
+        v = pol.record_step({**healthy, 3: 2.0})
+    assert v.rebalance == [3] and v.evict == []
+    for _ in range(3):                           # back to speed: decay
+        v = pol.record_step({**healthy, 3: 1.0})
+    assert v.rebalance == [] and v.evict == []
+
+
+def test_verdict_timestamps_use_injected_clock():
+    clk = FakeClock(7.0)
+    pol = StragglerPolicy(clock=clk)
+    assert pol.record_step({0: 1.0, 1: 1.0}).at == 7.0
+    assert pol.record_step({0: 1.0, 1: 1.0}, at=9.5).at == 9.5
+
+
+def test_empty_step_rejected():
+    with pytest.raises(ValueError, match="at least one host"):
+        StragglerPolicy().record_step({})
+
+
+def test_host_share_discounts_flagged():
+    pol = StragglerPolicy()
+    share = pol.host_share([0, 1, 2, 3], flagged=[3], discount=0.5)
+    assert share[3] == pytest.approx(share[0] / 2)
+    assert sum(share.values()) == pytest.approx(1.0)
