@@ -1,0 +1,115 @@
+"""Static-analysis cost: analyzer wall-time and verify_ir compile overhead.
+
+Per suite matrix, times (DESIGN.md §8):
+
+    compile_ms            — plain `compile_dag` wall clock (best of repeat)
+    verify_ms             — `compile_dag(verify_ir=True)` wall clock
+    verify_overhead_pct   — (verify - compile) / compile * 100; acceptance
+                            bar <= 10% compile-time overhead on the
+                            default configuration
+    analyze_ms            — `analysis.analyze_program` (hazards + lints)
+                            on the compiled artifact
+    errors/warns/infos    — diagnostic counts of the analyzed program
+                            (errors must be 0 on every suite matrix)
+
+``--smoke`` (wired into tier-1 via `tests/test_analysis.py`) runs the
+IR-level fault-injection harness (`core.robust.run_ir_fault_injection`)
+on one psum-heavy matrix, asserts every applicable fault class is caught
+by its per-pass verifier, and prints a one-matrix overhead reading
+against the 10% bar.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.core import api
+from repro.core.analysis import analyze_program
+from repro.core.matrices import generate
+from repro.core.robust import run_ir_fault_injection
+
+from .common import emit, timeit
+
+BENCH_SET = ["band_cz", "chem_bp", "ckt_rajat04", "band_dw2048",
+             "grid_activsg"]
+SMOKE_MATRIX = "ckt_rajat04"  # small, with live psum slot traffic
+
+OVERHEAD_BAR_PCT = 10.0
+
+
+def overhead_rows(names: list[str], repeat: int = 9) -> list[dict]:
+    rows = []
+    for name in names:
+        mat = generate(name)
+        # interleave the two timings: the overhead is a ratio of two
+        # wall-clocks, and pairing each sample keeps drifting machine
+        # load from landing on only one side of the division
+        prog = api.compile(mat)  # warm caches for both paths
+        api.compile(mat, verify_ir=True)
+        compile_s = verify_s = float("inf")
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            api.compile(mat)
+            compile_s = min(compile_s, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            api.compile(mat, verify_ir=True)
+            verify_s = min(verify_s, time.perf_counter() - t0)
+        analyze_s = timeit(lambda: analyze_program(prog), repeat=repeat)
+        report = analyze_program(prog)
+        rows.append({
+            "name": name,
+            "n": mat.n,
+            "nnz": mat.nnz,
+            "compile_ms": round(compile_s * 1e3, 2),
+            "verify_ms": round(verify_s * 1e3, 2),
+            "verify_overhead_pct": round(
+                100.0 * (verify_s - compile_s) / compile_s, 1),
+            "analyze_ms": round(analyze_s * 1e3, 2),
+            "errors": len(report.errors),
+            "warns": len(report.warnings),
+            "infos": len(report.infos),
+        })
+    return rows
+
+
+def fault_rows(name: str, seed: int = 0) -> list[dict]:
+    mat = generate(name)
+    return [{"name": name, **r}
+            for r in run_ir_fault_injection(mat, seed=seed)]
+
+
+def run(smoke: bool = False) -> list[dict]:
+    if smoke:
+        return fault_rows(SMOKE_MATRIX)
+    return overhead_rows(BENCH_SET)
+
+
+def main(argv: list[str] | None = None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    if "--smoke" in argv:
+        rows = run(smoke=True)
+        missed = [r["fault"] for r in rows
+                  if r["applicable"] and not r["caught"]]
+        assert not missed, f"IR faults missed by the verifiers: {missed}"
+        ov = overhead_rows([SMOKE_MATRIX], repeat=3)[0]
+        assert ov["errors"] == 0, f"clean compile reported errors: {ov}"
+        print(f"# smoke: {sum(r['applicable'] for r in rows)} applicable "
+              f"IR fault class(es) all caught by the per-pass verifiers; "
+              f"verify_ir overhead {ov['verify_overhead_pct']}% on "
+              f"{SMOKE_MATRIX} (bar: <= {OVERHEAD_BAR_PCT:.0f}%)")
+        return
+    rows = overhead_rows(BENCH_SET)
+    emit(rows, "analysis_overhead")
+    worst = max(r["verify_overhead_pct"] for r in rows)
+    print(f"# worst verify_ir compile overhead {worst}% "
+          f"(bar: <= {OVERHEAD_BAR_PCT:.0f}%)")
+    frows = fault_rows(SMOKE_MATRIX)
+    emit(frows, "analysis_faults")
+    caught = sum(r["caught"] for r in frows)
+    print(f"# {caught}/{sum(r['applicable'] for r in frows)} applicable "
+          f"IR fault classes caught by the per-pass contract verifiers")
+
+
+if __name__ == "__main__":
+    main()

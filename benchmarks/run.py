@@ -13,6 +13,7 @@ import sys
 import time
 
 from . import (
+    analysis_overhead,
     batched_rhs,
     compiler_scaling,
     dag_workloads,
@@ -42,6 +43,7 @@ MODULES = {
     "large_n": large_n,
     "dagwork": dag_workloads,
     "robust": robust_overhead,
+    "analysis": analysis_overhead,
 }
 
 

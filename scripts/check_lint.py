@@ -1,0 +1,155 @@
+#!/usr/bin/env python
+"""Source lint guard for the core library (tier-1 via tests/test_lint.py).
+
+Enforces the rule subset pinned in ``pyproject.toml`` ([tool.ruff]):
+F401 unused imports, E501 lines over 100 columns, W291/W293 trailing
+whitespace, E722 bare except.  Prefers a real ``ruff`` binary when the
+environment has one (same config file); otherwise falls back to a
+self-contained AST/line checker implementing the same subset, so the
+guard runs in the hermetic container without installing anything.
+
+``# noqa`` suppressions work in both modes: a bare ``# noqa`` silences
+the whole line, ``# noqa: F401`` only the listed codes.  Names exported
+via ``__all__`` count as used; ``from __future__ import ...`` is exempt
+from F401 by definition.
+
+    python scripts/check_lint.py            # lint the default roots
+    python scripts/check_lint.py src/foo.py # lint specific files
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DEFAULT_ROOTS = ("src/repro/core", "scripts")
+MAX_LINE = 100
+RULES = ("F401", "E501", "W291", "W293", "E722")
+
+_NOQA_RE = re.compile(r"#\s*noqa(?::\s*(?P<codes>[A-Z0-9, ]+))?", re.I)
+
+
+def _suppressed(line: str, code: str) -> bool:
+    m = _NOQA_RE.search(line)
+    if not m:
+        return False
+    codes = m.group("codes")
+    if not codes:
+        return True  # bare noqa
+    return code in {c.strip().upper() for c in codes.split(",")}
+
+
+def _exported_names(tree: ast.Module) -> set[str]:
+    out: set[str] = set()
+    for node in tree.body:
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AugAssign):
+            targets = [node.target]
+        if not any(isinstance(t, ast.Name) and t.id == "__all__"
+                   for t in targets):
+            continue
+        if isinstance(node.value, (ast.List, ast.Tuple)):
+            out |= {elt.value for elt in node.value.elts
+                    if isinstance(elt, ast.Constant)
+                    and isinstance(elt.value, str)}
+    return out
+
+
+def _lint_file(path: Path) -> list[str]:
+    text = path.read_text()
+    lines = text.splitlines()
+    problems: list[str] = []
+
+    def report(lineno: int, code: str, msg: str) -> None:
+        line = lines[lineno - 1] if 0 < lineno <= len(lines) else ""
+        if not _suppressed(line, code):
+            problems.append(f"{path.relative_to(REPO)}:{lineno}: "
+                            f"{code} {msg}")
+
+    for i, line in enumerate(lines, 1):
+        if len(line) > MAX_LINE:
+            report(i, "E501", f"line too long ({len(line)} > {MAX_LINE})")
+        stripped = line.rstrip()
+        if stripped != line:
+            report(i, "W293" if not stripped else "W291",
+                   "whitespace on blank line" if not stripped
+                   else "trailing whitespace")
+
+    try:
+        tree = ast.parse(text, filename=str(path))
+    except SyntaxError as e:
+        problems.append(f"{path.relative_to(REPO)}:{e.lineno}: "
+                        f"E999 syntax error: {e.msg}")
+        return problems
+
+    used = {n.id for n in ast.walk(tree) if isinstance(n, ast.Name)}
+    used |= _exported_names(tree)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ExceptHandler) and node.type is None:
+            report(node.lineno, "E722", "bare except")
+        elif isinstance(node, ast.Import):
+            for alias in node.names:
+                bound = alias.asname or alias.name.split(".")[0]
+                if bound not in used:
+                    report(node.lineno, "F401",
+                           f"unused import {alias.name!r}")
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                bound = alias.asname or alias.name
+                if bound not in used:
+                    report(node.lineno, "F401",
+                           f"unused import {alias.name!r}")
+    return problems
+
+
+def _try_ruff(paths: list[Path]) -> int | None:
+    """Run a real ruff when available; None when the binary is absent."""
+    ruff = shutil.which("ruff")
+    if ruff is None:
+        return None
+    proc = subprocess.run(
+        [ruff, "check", *map(str, paths)], cwd=REPO,
+        capture_output=True, text=True)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr)
+    return proc.returncode
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = argv if argv is not None else sys.argv[1:]
+    roots = [Path(a) if Path(a).is_absolute() else REPO / a
+             for a in args] or [REPO / r for r in DEFAULT_ROOTS]
+    files = sorted(p for root in roots
+                   for p in ([root] if root.is_file()
+                             else root.rglob("*.py")))
+
+    rc = _try_ruff(files)
+    if rc is not None:
+        return rc
+
+    problems: list[str] = []
+    for path in files:
+        problems += _lint_file(path)
+    if problems:
+        print("\n".join(problems))
+        print(f"\n{len(problems)} lint problem(s) "
+              f"(rules: {', '.join(RULES)}; fallback checker)")
+        return 1
+    print(f"lint clean: {len(files)} file(s) "
+          f"(rules: {', '.join(RULES)})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -43,6 +43,17 @@ input/output health checks and the graceful-degradation backend ladder
     prog = api.load_program("ckt.prog")          # CRC + structural verify
     solver = api.robust_solver(prog, mat)        # checked, self-degrading
     x = solver(b)                                # solver.last_incidents
+
+Static analysis (DESIGN.md §8): every compile entry point takes
+``verify_ir=True`` to run the per-pass IR contract verifiers between
+pipeline stages (a broken invariant raises `errors.IRValidationError`
+naming the guilty pass); `analyze_program` runs the full hazard detector
+plus performance linter over a compiled program and returns a structured
+`analysis.AnalysisReport` (``python -m scripts.lint_program`` is the CLI):
+
+    prog = api.compile(mat, verify_ir=True)      # per-pass contracts
+    report = api.analyze_program(prog)           # hazards + SPT2xx lints
+    print(report.render())                       # or report.to_json()
 """
 
 from __future__ import annotations
@@ -53,8 +64,14 @@ import numpy as np
 
 from . import matrices
 from .compiler import ComputeDag, compile_dag as _compile_dag
-from .csr import TriCSR, UpperCSR, random_rhs, serial_solve, transpose_upper
-from .dag import DagInfo, analyze
+from .csr import (  # noqa: F401  (random_rhs re-exported for callers)
+    TriCSR,
+    UpperCSR,
+    random_rhs,
+    serial_solve,
+    transpose_upper,
+)
+from .dag import DagInfo, analyze  # noqa: F401  (analyze is public API)
 from .executor import (
     as_batch,
     execute_jax,
@@ -87,6 +104,7 @@ __all__ = [
     "save_program",
     "load_program",
     "verify_program",
+    "analyze_program",
     "robust_solver",
     "AccelConfig",
     "Program",
@@ -102,8 +120,9 @@ def matrix(name: str) -> TriCSR:
     return matrices.generate(name)
 
 
-def compile(mat: TriCSR, cfg: AccelConfig | None = None) -> Program:  # noqa: A001
-    return compile_program(mat, cfg)
+def compile(mat: TriCSR, cfg: AccelConfig | None = None, *,  # noqa: A001
+            verify_ir: bool = False) -> Program:
+    return compile_program(mat, cfg, verify_ir=verify_ir)
 
 
 def solve(prog: Program, b: np.ndarray) -> np.ndarray:
@@ -245,33 +264,46 @@ class SolvePair:
 
 
 def compile_dag(dag: ComputeDag, cfg: AccelConfig | None = None, *,
-                planes: int | None = None) -> Program:
-    """Compile a generic `compiler.ComputeDag` through the staged pipeline."""
-    return _compile_dag(dag, cfg, planes=planes)
+                planes: int | None = None,
+                verify_ir: bool = False) -> Program:
+    """Compile a generic `compiler.ComputeDag` through the staged pipeline.
+
+    ``verify_ir=True`` runs the per-pass contract verifiers between
+    stages (`core/analysis/`) and raises `errors.IRValidationError`
+    naming the guilty pass on the first broken invariant.
+    """
+    return _compile_dag(dag, cfg, planes=planes, verify_ir=verify_ir)
 
 
 def compile_upper(mat: UpperCSR, cfg: AccelConfig | None = None, *,
-                  planes: int | None = None) -> CompiledWorkload:
+                  planes: int | None = None,
+                  verify_ir: bool = False) -> CompiledWorkload:
     """Compile the upper-triangular solve Ux=b (CSC-row reversal frontend)."""
     dag, perm = lower_upper(mat)
-    return CompiledWorkload(_compile_dag(dag, cfg, planes=planes),
+    return CompiledWorkload(_compile_dag(dag, cfg, planes=planes,
+                                         verify_ir=verify_ir),
                             perm=perm, name=mat.name)
 
 
 def compile_pair(mat: TriCSR, cfg: AccelConfig | None = None, *,
-                 planes: int | None = None) -> SolvePair:
+                 planes: int | None = None,
+                 verify_ir: bool = False) -> SolvePair:
     """Compile the forward (Ly=b) + backward (Lᵀx=y) sweep pair of ``mat``."""
-    fwd = CompiledWorkload(compile_program(mat, cfg, planes=planes),
+    fwd = CompiledWorkload(compile_program(mat, cfg, planes=planes,
+                                           verify_ir=verify_ir),
                            name=mat.name)
-    bwd = compile_upper(transpose_upper(mat), cfg, planes=planes)
+    bwd = compile_upper(transpose_upper(mat), cfg, planes=planes,
+                        verify_ir=verify_ir)
     return SolvePair(forward=fwd, backward=bwd)
 
 
 def compile_circuit(circ: DagCircuit, cfg: AccelConfig | None = None, *,
-                    planes: int | None = None) -> CompiledWorkload:
+                    planes: int | None = None,
+                    verify_ir: bool = False) -> CompiledWorkload:
     """Compile a general DAG circuit (`frontends.dagcirc`) workload."""
     return CompiledWorkload(_compile_dag(lower_circuit(circ), cfg,
-                                         planes=planes), name=circ.name)
+                                         planes=planes, verify_ir=verify_ir),
+                            name=circ.name)
 
 
 def solve_upper(cw: CompiledWorkload | UpperCSR, b: np.ndarray,
@@ -310,6 +342,21 @@ def verify_program(prog: Program) -> None:
     from .robust import verify_program as _verify
 
     _verify(prog)
+
+
+def analyze_program(prog: Program, *, lint: bool = True):
+    """Full static analysis of a compiled program (`core.analysis`).
+
+    Returns an `analysis.AnalysisReport`: correctness diagnostics (the
+    same hazard checks `verify_program` raises on, collected instead of
+    raised) plus, with ``lint=True``, the SPT2xx performance lints.
+    ``report.ok()`` is True when no error-severity diagnostic was found;
+    ``report.render()`` / ``report.to_json()`` are the two renderers the
+    `scripts/lint_program.py` CLI exposes.
+    """
+    from .analysis import analyze_program as _analyze
+
+    return _analyze(prog, lint=lint)
 
 
 def robust_solver(prog: Program, mat: TriCSR | None = None, **opts):

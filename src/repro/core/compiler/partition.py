@@ -11,8 +11,6 @@ builds the consumer adjacency + in-degrees the scheduler wakes nodes with.
 
 from __future__ import annotations
 
-import numpy as np
-
 from .ir import ComputeDag, PartitionIR
 
 __all__ = ["run"]

@@ -31,6 +31,7 @@ from __future__ import annotations
 __all__ = [
     "RobustnessError",
     "ProgramCorruptionError",
+    "IRValidationError",
     "MatrixValidationError",
     "NumericalHealthError",
     "BackendExecutionError",
@@ -54,6 +55,17 @@ class RobustnessError(Exception):
 
 class ProgramCorruptionError(RobustnessError, ValueError):
     """A compiled `Program` (or its serialized form) failed integrity checks."""
+
+
+class IRValidationError(ProgramCorruptionError):
+    """An intermediate IR broke a pass contract (`compile_dag(verify_ir=True)`).
+
+    Raised between compiler passes by the static analyzer
+    (`core/analysis/contracts.py`); the message and ``detail`` name the
+    pipeline stage whose output violated its invariant plus the
+    diagnostic codes found, so a miscompile is attributed to a pass
+    instead of surfacing later as a generic corrupt-program failure.
+    """
 
 
 class MatrixValidationError(RobustnessError, ValueError):

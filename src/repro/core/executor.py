@@ -49,7 +49,6 @@ import jax.numpy as jnp
 from .program import (
     OP_EDGE,
     OP_FINAL,
-    OP_NOP,
     PS_LOAD,
     PS_RESET,
     PS_STORE_RESET,

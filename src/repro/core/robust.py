@@ -4,14 +4,15 @@ Three layers over the existing compile/execute stack (DESIGN.md §7):
 
   * `verify_program` — a structural validator for compiled `Program`s.
     Everything the executors *assume* about an instruction stream is
-    checked explicitly: packed-field ranges (`program.validate_fields`),
-    zero-word NOP lanes, value-index bounds, finite stream values with
-    non-zero FINAL reciprocals, psum slot capacity and slot *lifetimes*
-    (a LOAD/SWAP must read a slot a previous STORE/SWAP filled), each
-    solution row finalized exactly once, dependency order (no EDGE reads
-    an x[src] not FINAL-written in a strictly earlier cycle), and the
-    row-envelope metadata (``row_lo/row_hi``) re-derived from the words
-    it summarizes.  Any violation is a `ProgramCorruptionError`.
+    checked explicitly: packed-field ranges, zero-word NOP lanes,
+    value-index bounds, finite stream values with non-zero FINAL
+    reciprocals, psum slot capacity and slot *lifetimes*, each solution
+    row finalized exactly once, dependency order, and the row-envelope
+    metadata (``row_lo/row_hi``) re-derived from the words it summarizes.
+    Since the static-analysis subsystem landed (DESIGN.md §8) this is a
+    thin wrapper over `core.analysis.program_diagnostics` — one shared
+    implementation with `compile_dag(verify_ir=True)` and the linter CLI;
+    messages are unchanged.  Any violation is a `ProgramCorruptionError`.
   * `RobustSolver` — a health-checked wrapper over `api.make_solver`:
     input validation (shape, dtype, NaN/Inf in b), output checks
     (non-finite x, relative residual ``max|Lx-b| / max|b|`` against the
@@ -25,7 +26,11 @@ Three layers over the existing compile/execute stack (DESIGN.md §7):
     corruption, poisoned right-hand sides, psum-slot rewrites) used by
     the test suite and `benchmarks/robust_overhead.py --smoke` to prove
     every fault class is either *detected* or *safely degraded* — never
-    a silent wrong answer.
+    a silent wrong answer.  `run_ir_fault_injection` extends the harness
+    one layer down: it mutates each intermediate IR of the staged
+    compiler post-pass and asserts the per-pass contract verifiers
+    (`core/analysis/contracts.py`) catch the mutation with the expected
+    diagnostic code.
 """
 
 from __future__ import annotations
@@ -35,6 +40,7 @@ import time
 
 import numpy as np
 
+from .analysis import SEV_ERROR, program_diagnostics
 from .csr import TriCSR, serial_solve
 from .errors import (
     BackendExecutionError,
@@ -42,17 +48,16 @@ from .errors import (
     ProgramCorruptionError,
     RobustnessError,
 )
-from .executor import _psum_slots, as_batch, execute_numpy, make_pallas_executor, make_jax_executor
+from .executor import as_batch, execute_numpy, make_pallas_executor, make_jax_executor
 from .program import (
     OP_EDGE,
     OP_FINAL,
-    OP_NOP,
     PS_LOAD,
     PS_STORE_RESET,
     PS_SWAP,
+    AccelConfig,
     Program,
     decode_instructions,
-    validate_fields,
 )
 
 __all__ = [
@@ -61,10 +66,12 @@ __all__ = [
     "RobustSolver",
     "FaultInjector",
     "run_fault_injection",
+    "run_ir_fault_injection",
     "csr_matvec",
     "relative_residual",
     "LADDER",
     "FAULT_CLASSES",
+    "IR_FAULT_CLASSES",
 ]
 
 # The deterministic degradation order.  A requested backend enters the
@@ -75,123 +82,27 @@ LADDER = ("pallas-blocked", "pallas-resident", "jax", "numpy", "reference")
 _ENTRY = {"pallas": 0, "jax": 2, "numpy": 3}
 
 
-def _fail(msg: str, **detail) -> ProgramCorruptionError:
-    return ProgramCorruptionError(f"program integrity: {msg}", detail=detail)
-
-
 def verify_program(prog: Program) -> None:
     """Structurally validate a compiled `Program` (see module docstring).
 
     Raises `ProgramCorruptionError` naming the first violated invariant;
     returns None on a clean program.  Pure numpy, no executor is touched —
     safe to run on untrusted/deserialized programs before any solve.
+
+    Thin wrapper over the shared static analyzer
+    (`core.analysis.program_diagnostics`): the hazard checks run in the
+    historical order and the raised message is the first error
+    diagnostic's, verbatim, so callers matching on messages are
+    unaffected; the diagnostic code rides along in ``detail["code"]``.
     """
-    instr = np.asarray(prog.instr)
-    if instr.ndim != 3 or instr.dtype != np.int32:
-        raise _fail(f"instr must be [T, planes, P] int32, got "
-                    f"{instr.shape} {instr.dtype}")
-    t, planes, p = instr.shape
-    if planes not in (1, 2):
-        raise _fail(f"planes must be 1 or 2, got {planes}")
-    vidx = np.asarray(prog.val_idx)
-    if vidx.shape != (t, p):
-        raise _fail(f"val_idx shape {vidx.shape} != instr rows {(t, p)}")
-    stream = np.asarray(prog.stream)
-    if stream.ndim != 1:
-        raise _fail(f"stream must be 1-D, got shape {stream.shape}")
-    if not np.isfinite(stream).all():
-        bad = int(np.count_nonzero(~np.isfinite(stream)))
-        raise _fail(f"stream carries {bad} non-finite value(s)",
-                    non_finite=bad)
-    if vidx.size and (vidx.min() < 0 or vidx.max() >= stream.size):
-        raise _fail(f"val_idx out of stream bounds [0, {stream.size})",
-                    lo=int(vidx.min()), hi=int(vidx.max()))
-
-    op, src, ctl, slot = decode_instructions(instr, planes)
-    try:
-        validate_fields(op, src, ctl, slot, planes)
-    except ValueError as e:
-        raise _fail(f"packed field range: {e}") from e
-    if int(op.max(initial=0)) > OP_FINAL:
-        raise _fail(f"invalid opcode {int(op.max())} (beyond OP_FINAL)")
-    if int(ctl.max(initial=0)) > PS_SWAP:
-        raise _fail(f"invalid psum control {int(ctl.max())} (beyond PS_SWAP)")
-
-    active = op != OP_NOP
-    # NOP lanes are all-zero words by construction (pad rows, elided
-    # lanes); a non-zero NOP word means bits were flipped into fields the
-    # executor still applies (the psum control runs on every lane).
-    nop_nonzero = (~active) & (instr != 0).any(axis=1)
-    if nop_nonzero.any():
-        tt, pp = np.argwhere(nop_nonzero)[0]
-        raise _fail(f"NOP lane carries a non-zero word at cycle {tt}, "
-                    f"cu {pp}", cycle=int(tt), cu=int(pp))
-    if active.any() and int(src[active].max()) >= prog.n:
-        raise _fail(f"active lane reads row >= n={prog.n}",
-                    row=int(src[active].max()))
-
-    nslots = _psum_slots(prog)
-    uses_slot = (ctl == PS_LOAD) | (ctl == PS_STORE_RESET) | (ctl == PS_SWAP)
-    if uses_slot.any() and int(slot[uses_slot].max()) >= nslots:
-        raise _fail(f"psum slot {int(slot[uses_slot].max())} >= register "
-                    f"file size {nslots}", num_slots=nslots)
-
-    # every solution row finalized exactly once
-    finals = src[op == OP_FINAL]
-    counts = np.bincount(finals, minlength=prog.n) if finals.size else \
-        np.zeros(prog.n, dtype=np.int64)
-    if finals.size != prog.n or (counts != 1).any():
-        row = int(np.argmax(counts != 1))
-        raise _fail(f"row {row} finalized {int(counts[row])} times "
-                    f"(every row must be finalized exactly once)", row=row)
-
-    # dependency order: EDGE at cycle t reads x[src] => src FINAL'd at
-    # some cycle < t
-    cyc = np.broadcast_to(np.arange(t)[:, None], (t, p))
-    final_cycle = np.full(prog.n, t, dtype=np.int64)
-    final_cycle[finals] = cyc[op == OP_FINAL]
-    edges = op == OP_EDGE
-    if edges.any():
-        viol = final_cycle[src[edges]] >= cyc[edges]
-        if viol.any():
-            k = int(np.argmax(viol))
-            row = int(src[edges][k])
-            raise _fail(
-                f"dependency order: an EDGE reads x[{row}] at cycle "
-                f"{int(cyc[edges][k])} but row {row} is finalized at cycle "
-                f"{int(final_cycle[row])}", row=row)
-
-    # FINAL stream values are diagonal reciprocals — zero would divide out
-    if (op == OP_FINAL).any():
-        fvals = stream[vidx[op == OP_FINAL]]
-        if (fvals == 0).any():
-            raise _fail("FINAL lane carries a zero diagonal reciprocal")
-
-    # psum slot lifetimes, per CU: LOAD/SWAP read a live slot; STORE/SWAP
-    # fill it; LOAD consumes it.  Iterate psum events only (sparse).
-    ev_t, ev_p = np.nonzero(ctl)
-    order = np.lexsort((ev_t, ev_p))
-    live: set[tuple[int, int]] = set()
-    for k in order:
-        c, s, pp, tt = int(ctl[ev_t[k], ev_p[k]]), int(slot[ev_t[k], ev_p[k]]), int(ev_p[k]), int(ev_t[k])
-        key = (pp, s)
-        if c in (PS_LOAD, PS_SWAP) and key not in live:
-            raise _fail(f"psum lifetime: cu {pp} reads slot {s} at cycle "
-                        f"{tt} before any store", cu=pp, slot=s, cycle=tt)
-        if c in (PS_STORE_RESET, PS_SWAP):
-            live.add(key)
-        elif c == PS_LOAD:
-            live.discard(key)
-
-    # row-envelope metadata re-derived from the words it summarizes
-    if prog.row_lo is not None and prog.row_hi is not None:
-        lo = np.where(active, src, prog.n).min(axis=1).astype(np.int32)
-        hi = np.where(active, src, -1).max(axis=1).astype(np.int32)
-        if not (np.array_equal(lo, prog.row_lo)
-                and np.array_equal(hi, prog.row_hi)):
-            bad = int(np.argmax((lo != prog.row_lo) | (hi != prog.row_hi)))
-            raise _fail(f"row-envelope metadata inconsistent with the "
-                        f"instruction words at cycle {bad}", cycle=bad)
+    for d in program_diagnostics(prog):
+        if d.severity == SEV_ERROR:
+            anchors = {k: v for k, v in
+                       (("cycle", d.cycle), ("cu", d.cu), ("node", d.node))
+                       if v is not None}
+            raise ProgramCorruptionError(
+                f"program integrity: {d.message}",
+                detail={**anchors, **d.detail, "code": d.code})
 
 
 # ---------------------------------------------------------------------------
@@ -552,6 +463,103 @@ class FaultInjector:
         flat[self.rng.integers(flat.size, size=k)] = value
         return out
 
+    # -- IR-level mutation faults (caught by analysis.contracts) -----------
+    # Each returns a corrupted *copy* of one intermediate IR of the staged
+    # compiler, or None when the fault does not apply to this workload
+    # (e.g. no edges, no psum traffic).  `run_ir_fault_injection` drives
+    # the pipeline, mutates each IR post-pass, and asserts the matching
+    # per-pass verifier fires the expected diagnostic code.
+
+    def corrupt_dag(self, dag):
+        """Rewrite one edge source onto its own consumer (topo break)."""
+        if dag.n_edges == 0:
+            return None
+        src = dag.src.copy()
+        owner_row = np.repeat(np.arange(dag.n), np.diff(dag.ptr))
+        k = int(self.rng.integers(dag.n_edges))
+        src[k] = owner_row[k]  # sources must be strictly smaller node ids
+        return dataclasses.replace(dag, src=src)
+
+    def corrupt_partition(self, pir):
+        """Drop one consumer edge from the wake-up adjacency."""
+        cands = [j for j in range(pir.dag.n) if pir.consumers[j]]
+        if not cands:
+            return None
+        j = cands[int(self.rng.integers(len(cands)))]
+        consumers = [list(c) for c in pir.consumers]
+        consumers[j] = consumers[j][:-1]
+        return dataclasses.replace(pir, consumers=consumers)
+
+    def corrupt_assign(self, air):
+        """Flip one node's owner without touching the task lists."""
+        if len(air.task_lists) < 2:
+            return None
+        owner = np.asarray(air.owner).copy()
+        i = int(self.rng.integers(owner.size))
+        owner[i] = (owner[i] + 1) % len(air.task_lists)
+        return dataclasses.replace(air, owner=owner)
+
+    def corrupt_schedule(self, sir, mode: str):
+        """Mutate the dense cycle trace (``mode``: raw | dup_final |
+        slot_cap | use_before_def)."""
+        ops = sir.ops.copy()
+        src = sir.src.copy()
+        ctl = sir.ctl.copy()
+        slot = sir.slot.copy()
+        if mode == "raw":
+            edges = np.argwhere(ops == OP_EDGE)
+            finals = np.argwhere(ops == OP_FINAL)
+            if not edges.size or not finals.size:
+                return None
+            # retarget an early EDGE at the row finalized last
+            t_last = int(finals[:, 0].max())
+            lt, lp = finals[finals[:, 0] == t_last][0]
+            early = edges[edges[:, 0] <= t_last]
+            if not early.size:
+                return None
+            t, p = early[int(self.rng.integers(len(early)))]
+            src[t, p] = src[lt, lp]
+        elif mode == "dup_final":
+            edges = np.argwhere(ops == OP_EDGE)
+            if not edges.size:
+                return None
+            t, p = edges[int(self.rng.integers(len(edges)))]
+            ops[t, p] = OP_FINAL  # its src row is already finalized once
+        elif mode == "slot_cap":
+            ev = np.argwhere((ctl == PS_LOAD) | (ctl == PS_STORE_RESET)
+                             | (ctl == PS_SWAP))
+            if not ev.size:
+                return None
+            t, p = ev[int(self.rng.integers(len(ev)))]
+            slot[t, p] = 255  # beyond any configured register file
+        elif mode == "use_before_def":
+            ev = np.argwhere(ctl == PS_STORE_RESET)
+            if not ev.size:
+                return None
+            t, p = ev[int(self.rng.integers(len(ev)))]
+            ctl[t, p] = PS_LOAD  # the slot was free here: read-before-store
+        else:
+            raise ValueError(f"unknown schedule corruption mode {mode!r}")
+        return dataclasses.replace(sir, ops=ops, src=src, ctl=ctl, slot=slot)
+
+    def corrupt_emit(self, eir, mode: str):
+        """Mutate the emitted trace (``mode``: envelope | stall_row)."""
+        if mode == "envelope":
+            row_lo = eir.row_lo.copy()
+            t = int(self.rng.integers(row_lo.size))
+            row_lo[t] += 1
+            return dataclasses.replace(eir, row_lo=row_lo)
+        if mode == "stall_row":
+            t = int(self.rng.integers(eir.ops.shape[0] + 1))
+            ins = {f: np.insert(getattr(eir, f), t, 0, axis=0)
+                   for f in ("ops", "src", "ctl", "slot", "val_idx")}
+            return dataclasses.replace(
+                eir,
+                row_lo=np.insert(eir.row_lo, t, eir.n),
+                row_hi=np.insert(eir.row_hi, t, -1),
+                **ins)
+        raise ValueError(f"unknown emit corruption mode {mode!r}")
+
 
 def run_fault_injection(mat: TriCSR, prog: Program | None = None, *,
                         trials_per_class: int = 3, seed: int = 0,
@@ -636,4 +644,106 @@ def run_fault_injection(mat: TriCSR, prog: Program | None = None, *,
                 "degraded_to": degraded,
                 "silent_wrong": bool(detected == "none" and not ok),
             })
+    return results
+
+
+# ---------------------------------------------------------------------------
+# IR-level fault injection (the per-pass verifiers' acceptance harness)
+# ---------------------------------------------------------------------------
+IR_FAULT_CLASSES = (
+    "dag_self_edge",
+    "partition_drop_consumer",
+    "assign_owner_swap",
+    "sched_raw",
+    "sched_dup_final",
+    "sched_slot_cap",
+    "sched_use_before_def",
+    "emit_envelope",
+    "emit_stall_row",
+    "pack_val_idx_oob",
+)
+
+# fault class -> the diagnostic code the matching verifier must fire
+_IR_EXPECTED = {
+    "dag_self_edge": "SPT118",
+    "partition_drop_consumer": "SPT119",
+    "assign_owner_swap": "SPT120",
+    "sched_raw": "SPT111",
+    "sched_dup_final": "SPT110",
+    "sched_slot_cap": "SPT113",
+    "sched_use_before_def": "SPT112",
+    "emit_envelope": "SPT114",
+    "emit_stall_row": "SPT121",
+    "pack_val_idx_oob": "SPT106",
+}
+
+
+def run_ir_fault_injection(mat: TriCSR, cfg: AccelConfig | None = None, *,
+                           seed: int = 0,
+                           classes: tuple[str, ...] = IR_FAULT_CLASSES) -> list[dict]:
+    """Mutate every intermediate IR post-pass; assert the verifiers catch it.
+
+    Runs the staged pipeline once, then for each fault class corrupts the
+    relevant IR (`FaultInjector.corrupt_*`) and runs *only* that stage's
+    contract verifier (`core/analysis/contracts.py`).  Returns one dict
+    per class: ``fault``, ``applicable`` (False when the workload has no
+    site for this fault — e.g. no psum traffic), ``expected_code``,
+    ``fired_codes`` (error-severity codes the verifier reported) and
+    ``caught``.  The acceptance bar is ``caught`` for every applicable
+    class — a mutation the verifiers miss would otherwise surface only as
+    a generic corrupt-program failure after packing, unattributed.
+    """
+    from .analysis import contracts
+    from .compiler import assign, elide, emit, partition, sched
+    from .frontends.sptrsv import lower_tri
+
+    cfg = cfg or AccelConfig()
+    dag = lower_tri(mat)
+    pir = partition.run(dag)
+    air = assign.run(pir, cfg)
+    sir = sched.run(air, cfg)
+    eir = elide.run(sir)
+    prog = emit.run(eir, cfg, planes=None)
+
+    inj = FaultInjector(seed)
+    results = []
+    for fault in classes:
+        expected = _IR_EXPECTED[fault]
+        bad, diags = None, None
+        if fault == "dag_self_edge":
+            bad = inj.corrupt_dag(dag)
+            if bad is not None:
+                diags = contracts.verify_frontend(bad)
+        elif fault == "partition_drop_consumer":
+            bad = inj.corrupt_partition(pir)
+            if bad is not None:
+                diags = contracts.verify_partition(bad)
+        elif fault == "assign_owner_swap":
+            bad = inj.corrupt_assign(air)
+            if bad is not None:
+                diags = contracts.verify_assign(bad, cfg)
+        elif fault.startswith("sched_"):
+            bad = inj.corrupt_schedule(sir, fault[len("sched_"):])
+            if bad is not None:
+                diags = contracts.verify_schedule(bad, air, cfg)
+        elif fault.startswith("emit_"):
+            bad = inj.corrupt_emit(eir, fault[len("emit_"):])
+            if bad is not None:
+                diags = contracts.verify_emit(bad, sir)
+        elif fault == "pack_val_idx_oob":
+            bad = _copy_program(prog)
+            bad.val_idx[0, 0] = np.int32(bad.stream.size + 7)
+            diags = contracts.verify_packed_program(bad, eir, cfg)
+        else:
+            raise ValueError(f"unknown IR fault class {fault!r}")
+        fired = sorted({d.code for d in diags
+                        if d.severity == SEV_ERROR}) if diags is not None \
+            else []
+        results.append({
+            "fault": fault,
+            "applicable": bad is not None,
+            "expected_code": expected,
+            "fired_codes": fired,
+            "caught": expected in fired,
+        })
     return results

@@ -1,0 +1,51 @@
+"""Property-based tests (hypothesis) on the static-analysis subsystem.
+
+Complements `tests/test_analysis.py` (which always runs): for ANY
+well-formed random lower-triangular system the verified compile must be
+diagnostic-free, and for ANY seed every IR-level fault class must be
+caught by its per-pass contract verifier.
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import api, matrices  # noqa: E402
+from repro.core.analysis import analyze_program  # noqa: E402
+from repro.core.csr import from_coo  # noqa: E402
+from repro.core.robust import (  # noqa: E402
+    IR_FAULT_CLASSES,
+    run_ir_fault_injection,
+)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 48), st.integers(0, 2**31 - 1))
+def test_random_lower_tri_verifies_clean(n, seed):
+    rng = np.random.default_rng(seed)
+    rows, cols = [], []
+    for i in range(1, n):
+        m = rng.random(i) < 0.3
+        for j in np.nonzero(m)[0]:
+            rows.append(i)
+            cols.append(int(j))
+    vals = rng.uniform(-1, 1, len(rows))
+    diag = rng.uniform(1.0, 2.0, n)
+    mat = from_coo(n, rows, cols, vals, diag, name=f"hyp_an_{seed}")
+    prog = api.compile(mat, verify_ir=True)
+    assert analyze_program(prog, lint=False).ok()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from(IR_FAULT_CLASSES), st.integers(0, 2**31 - 1))
+def test_random_seeded_faults_always_caught(fault, seed):
+    mat = matrices.generate("ckt_rajat04")
+    (r,) = run_ir_fault_injection(mat, seed=seed, classes=(fault,))
+    assert r["applicable"] and r["caught"], r

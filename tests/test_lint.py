@@ -1,0 +1,48 @@
+"""Tier-1 shim over the source lint guard (`scripts/check_lint.py`).
+
+The guard enforces the ruff rule subset pinned in ``pyproject.toml``
+(F401/E501/W291/W293/E722) over ``src/repro/core`` and ``scripts`` —
+with a real ruff when available, its built-in AST checker otherwise —
+so lint rot fails the test suite, not just CI environments that happen
+to ship ruff.
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "scripts"))
+
+import check_lint  # noqa: E402
+
+
+def test_core_sources_lint_clean(capsys):
+    rc = check_lint.main([])
+    out = capsys.readouterr().out
+    assert rc == 0, f"lint problems:\n{out}"
+
+
+def test_noqa_suppression_works(tmp_path, monkeypatch):
+    f = tmp_path / "mod.py"
+    f.write_text("import os  # noqa: F401\nimport sys  # noqa\n")
+    monkeypatch.setattr(check_lint, "REPO", tmp_path)
+    assert check_lint._lint_file(f) == []
+
+
+def test_fallback_catches_unused_import(tmp_path, monkeypatch):
+    f = tmp_path / "mod.py"
+    f.write_text("import os\nimport sys  # noqa: F401\n\n"
+                 "x = 1  \ntry:\n    pass\nexcept:\n    pass\n")
+    monkeypatch.setattr(check_lint, "REPO", tmp_path)
+    problems = check_lint._lint_file(f)
+    codes = {p.split(": ")[1].split()[0] for p in problems}
+    assert codes == {"F401", "W291", "E722"}
+
+
+def test_fallback_counts_all_exports_as_used(tmp_path, monkeypatch):
+    f = tmp_path / "mod.py"
+    f.write_text('from os import path\n\n__all__ = ["path"]\n')
+    monkeypatch.setattr(check_lint, "REPO", tmp_path)
+    assert check_lint._lint_file(f) == []
