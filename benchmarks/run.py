@@ -25,6 +25,7 @@ from . import (
     platform_comparison,
     psum_sweep,
     robust_overhead,
+    serve_load,
     sharded_batch,
     suite_stats,
 )
@@ -44,6 +45,7 @@ MODULES = {
     "dagwork": dag_workloads,
     "robust": robust_overhead,
     "analysis": analysis_overhead,
+    "serve": serve_load,
 }
 
 

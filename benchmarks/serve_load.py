@@ -1,0 +1,218 @@
+"""Serve-load benchmark: sustained solves/sec + latency under Poisson load.
+
+    PYTHONPATH=src python -m benchmarks.serve_load             # full, CSV
+    PYTHONPATH=src python -m benchmarks.serve_load --record    # + BENCH_serve.json
+    PYTHONPATH=src python -m benchmarks.serve_load --smoke     # tier-1 guard
+
+Open-loop load against the production solve service (DESIGN.md §9): a
+seeded Poisson arrival process offers single-column solve requests at a
+rate of ``--offered-batch`` (B) arrivals per ``--max-delay`` window, so
+buckets mostly fill to B before their deadline.  Arrivals live on a
+virtual timeline (the service's injectable clock — no sleeps anywhere);
+solve cost is *measured* wall time per flush (``timer=perf_counter``),
+and a single-server queueing replay of the flush log turns the two into
+sustained throughput and per-request latency:
+
+    completion(flush_i) = max(flush_time_i, server_free) + measured_dt_i
+    latency(request)    = completion(last flush of its ticket) - arrival
+
+Reported per matrix: micro-batched sustained solves/sec (requests over
+total measured solve time), the sequential per-request baseline (every
+request solved alone through the width-1 cached executor), their ratio,
+and p50/p99 latency.  ``--record`` appends a dated entry to the
+``BENCH_serve.json`` trajectory file (schema checked by
+``scripts/check_bench.py``) so re-anchors see a curve, not just CSVs.
+
+``--smoke`` (wired into tier-1 via `tests/test_serve.py`) runs a small
+two-matrix load and asserts the micro-batched path beats the sequential
+baseline and that every request completed exactly once.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import api
+from repro.core.matrices import generate
+from repro.core.serve import ManualClock, ProgramCache, SolveService
+
+from .common import emit
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+BENCH_SCHEMA = "sptrsv-bench-serve"
+BENCH_VERSION = 1
+
+FULL_SET = ("band_cz", "ckt_fpga", "chem_bp", "grid_activsg", "band_jagmesh")
+SMOKE_SET = ("band_cz", "chem_bp")
+
+
+def _run_service(mat, requests: int, offered_batch: int, max_delay: float,
+                 seed: int, backend: str):
+    """Drive one matrix's Poisson stream; returns (tickets+arrivals, stats)."""
+    cache = ProgramCache(capacity=4)
+    clock = ManualClock()
+    svc = SolveService(cache, max_batch=offered_batch, max_delay=max_delay,
+                       clock=clock, timer=time.perf_counter, backend=backend)
+    svc.register(mat.name, mat)
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(max_delay / offered_batch,
+                                         size=requests))
+    cols = rng.standard_normal((mat.n, requests)).astype(np.float32)
+
+    # warm: compile + trace every padded width a flush can hit, outside
+    # the measured stream (production fleets serve warm programs)
+    warm = SolveService(cache, max_batch=offered_batch, max_delay=max_delay,
+                        clock=ManualClock(), backend=backend)
+    warm.register(mat.name, mat)
+    for k in range(1, offered_batch + 1):
+        for _ in range(k):
+            warm.submit(mat.name, cols[:, 0])
+        warm.drain()
+
+    tickets = []
+    for i in range(requests):
+        clock.now = float(arrivals[i])
+        tickets.append((svc.submit(mat.name, cols[:, i]), float(arrivals[i])))
+    clock.advance(max_delay)
+    svc.pump()
+    svc.drain()
+    return tickets, svc.stats, cols
+
+
+def _queue_replay(stats):
+    """Single-server completion time per flush index (see module doc)."""
+    completion = {}
+    server_free = 0.0
+    for f in stats.flushes:
+        done = max(f.at, server_free) + f.service_s
+        completion[f.index] = done
+        server_free = done
+    return completion
+
+
+def _sequential_baseline(mat, cols, backend: str, repeat: int = 1) -> float:
+    """Total seconds to solve every column alone (width-1 executor)."""
+    prog = ProgramCache(capacity=1).get(mat)
+    if backend == "numpy":
+        solve = lambda b: api.solve_numpy(prog, b)  # noqa: E731
+    else:
+        solve = api.make_solver(prog)
+    solve(cols[:, 0])  # warm the trace
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        for i in range(cols.shape[1]):
+            solve(cols[:, i])
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_matrix(name: str, requests: int, offered_batch: int,
+                 max_delay: float, seed: int, backend: str) -> dict:
+    mat = generate(name)
+    tickets, stats, cols = _run_service(mat, requests, offered_batch,
+                                        max_delay, seed, backend)
+    assert all(t.done for t, _ in tickets), f"{name}: unfinished tickets"
+    completion = _queue_replay(stats)
+    lat = np.asarray([completion[max(t.flush_indices)] - arr
+                      for t, arr in tickets])
+    busy = sum(f.service_s for f in stats.flushes)
+    seq_s = _sequential_baseline(mat, cols, backend)
+    batched = requests / busy if busy > 0 else float("inf")
+    sequential = requests / seq_s if seq_s > 0 else float("inf")
+    mean_cols = (sum(f.columns for f in stats.flushes)
+                 / max(1, stats.flush_count()))
+    return {
+        "name": name,
+        "n": mat.n,
+        "requests": requests,
+        "offered_batch": offered_batch,
+        "batched_solves_per_s": round(batched, 1),
+        "sequential_solves_per_s": round(sequential, 1),
+        "speedup": round(batched / sequential, 2),
+        "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+        "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+        "mean_batch_cols": round(mean_cols, 1),
+        "flushes_full": stats.flushes_full,
+        "flushes_deadline": stats.flushes_deadline + stats.flushes_drain,
+    }
+
+
+def record_trajectory(rows: list[dict], offered_batch: int,
+                      label: str) -> None:
+    """Append a dated entry to the BENCH_serve.json trajectory file."""
+    doc = {"schema": BENCH_SCHEMA, "version": BENCH_VERSION, "entries": []}
+    if os.path.exists(BENCH_JSON):
+        with open(BENCH_JSON) as f:
+            doc = json.load(f)
+    doc["entries"].append({
+        "recorded": time.strftime("%Y-%m-%d"),
+        "label": label,
+        "host": "cpu-interpret" if not _on_tpu() else "tpu",
+        "offered_batch": offered_batch,
+        "rows": rows,
+    })
+    with open(BENCH_JSON, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# trajectory entry #{len(doc['entries'])} -> {BENCH_JSON}")
+
+
+def _on_tpu() -> bool:
+    import jax
+
+    return jax.devices()[0].platform == "tpu"
+
+
+def run(smoke: bool = False, requests: int | None = None,
+        offered_batch: int = 16, max_delay: float = 5e-3, seed: int = 0,
+        backend: str = "jax", names=None) -> list[dict]:
+    names = names or (SMOKE_SET if smoke else FULL_SET)
+    requests = requests or (64 if smoke else 256)
+    return [bench_matrix(n, requests, offered_batch, max_delay, seed, backend)
+            for n in names]
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--record", action="store_true",
+                    help="append results to BENCH_serve.json")
+    ap.add_argument("--label", default="serve-load")
+    ap.add_argument("--matrices", default="")
+    ap.add_argument("--requests", type=int, default=0)
+    ap.add_argument("--offered-batch", type=int, default=16)
+    ap.add_argument("--max-delay", type=float, default=5e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="jax",
+                    choices=("jax", "numpy", "pallas"))
+    args = ap.parse_args(argv)
+    names = tuple(args.matrices.split(",")) if args.matrices else None
+    rows = run(smoke=args.smoke, requests=args.requests or None,
+               offered_batch=args.offered_batch, max_delay=args.max_delay,
+               seed=args.seed, backend=args.backend, names=names)
+    if args.smoke:
+        for r in rows:
+            assert r["speedup"] >= 1.5, (
+                f"{r['name']}: micro-batching only {r['speedup']}x the "
+                f"sequential baseline")
+        print(f"# smoke: {len(rows)} matrices served, micro-batched "
+              f"throughput {min(r['speedup'] for r in rows)}-"
+              f"{max(r['speedup'] for r in rows)}x sequential at "
+              f"B={args.offered_batch}")
+        return
+    emit(rows, "serve_load")
+    worst = min(r["speedup"] for r in rows)
+    print(f"# worst micro-batched/sequential speedup {worst}x at "
+          f"B={args.offered_batch} (acceptance bar: >= 5x)")
+    if args.record:
+        record_trajectory(rows, args.offered_batch, args.label)
+
+
+if __name__ == "__main__":
+    main()

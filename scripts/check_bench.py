@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""BENCH_serve.json schema check: the perf trajectory stays machine-readable.
+
+``BENCH_serve.json`` is the repo's perf *trajectory* — every
+``benchmarks/serve_load.py --record`` run appends a dated entry, so
+re-anchors can read a curve instead of a single CSV snapshot.  A
+trajectory is only useful if every entry still parses years later, so
+this check pins the schema: top-level envelope, per-entry metadata, and
+the per-matrix row fields with their types.  Runs standalone
+(``python scripts/check_bench.py``) and as a tier-1 test
+(`tests/test_serve.py`).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+BENCH_JSON = REPO / "BENCH_serve.json"
+
+SCHEMA = "sptrsv-bench-serve"
+VERSION = 1
+
+# required per-row fields -> accepted types
+ROW_FIELDS = {
+    "name": str,
+    "n": int,
+    "requests": int,
+    "offered_batch": int,
+    "batched_solves_per_s": (int, float),
+    "sequential_solves_per_s": (int, float),
+    "speedup": (int, float),
+    "p50_ms": (int, float),
+    "p99_ms": (int, float),
+}
+ENTRY_FIELDS = {
+    "recorded": str,   # ISO date, checked below
+    "label": str,
+    "host": str,
+    "offered_batch": int,
+    "rows": list,
+}
+
+
+def check(path: Path = BENCH_JSON) -> list[str]:
+    """Return a list of human-readable problems (empty == clean)."""
+    if not path.exists():
+        return [f"{path.name} missing (run benchmarks/serve_load.py "
+                f"--record to create it)"]
+    try:
+        doc = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        return [f"{path.name}: not valid JSON ({e})"]
+    problems: list[str] = []
+    if doc.get("schema") != SCHEMA:
+        problems.append(f"schema must be {SCHEMA!r}, got {doc.get('schema')!r}")
+    if doc.get("version") != VERSION:
+        problems.append(f"version must be {VERSION}, got {doc.get('version')!r}")
+    entries = doc.get("entries")
+    if not isinstance(entries, list) or not entries:
+        return problems + ["entries must be a non-empty list"]
+    for i, entry in enumerate(entries):
+        where = f"entries[{i}]"
+        for field, typ in ENTRY_FIELDS.items():
+            if not isinstance(entry.get(field), typ):
+                problems.append(f"{where}.{field}: expected {typ}, "
+                                f"got {entry.get(field)!r}")
+        rec = entry.get("recorded", "")
+        if isinstance(rec, str) and (len(rec) != 10 or rec[4] != "-"
+                                     or rec[7] != "-"):
+            problems.append(f"{where}.recorded: expected YYYY-MM-DD, "
+                            f"got {rec!r}")
+        rows = entry.get("rows") or []
+        if isinstance(rows, list) and not rows:
+            problems.append(f"{where}.rows: empty")
+        for j, row in enumerate(rows if isinstance(rows, list) else []):
+            for field, typ in ROW_FIELDS.items():
+                if not isinstance(row.get(field), typ) or \
+                        isinstance(row.get(field), bool):
+                    problems.append(
+                        f"{where}.rows[{j}].{field}: expected {typ}, "
+                        f"got {row.get(field)!r}")
+    return problems
+
+
+def main() -> int:
+    problems = check()
+    for p in problems:
+        print(f"check_bench: {p}", file=sys.stderr)
+    if problems:
+        print(f"check_bench: {len(problems)} schema problem(s)",
+              file=sys.stderr)
+        return 1
+    doc = json.loads(BENCH_JSON.read_text())
+    n_rows = sum(len(e["rows"]) for e in doc["entries"])
+    print(f"check_bench: OK ({len(doc['entries'])} trajectory entr"
+          f"{'y' if len(doc['entries']) == 1 else 'ies'}, {n_rows} rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

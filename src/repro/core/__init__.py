@@ -5,7 +5,7 @@ psum caching + ICR + bank model), the coarse/fine baseline dataflows, the
 branch-free VLIW executors, and the benchmark-matrix suite.
 """
 
-from . import api, compiler, dag, frontends, matrices  # noqa: F401
+from . import api, compiler, dag, frontends, matrices, serve  # noqa: F401
 from .compiler import ComputeDag, compile_dag  # noqa: F401
 from .csr import TriCSR, UpperCSR, serial_solve, serial_solve_upper  # noqa: F401
 from .program import AccelConfig, Program, ScheduleStats  # noqa: F401

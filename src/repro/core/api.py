@@ -44,6 +44,15 @@ input/output health checks and the graceful-degradation backend ladder
     solver = api.robust_solver(prog, mat)        # checked, self-degrading
     x = solver(b)                                # solver.last_incidents
 
+Production serving (DESIGN.md §9): `make_service` fronts the stack with
+a continuous micro-batching solve service over a multi-tenant LRU
+program cache (structure-only pattern fingerprints, CRC-verified disk
+tier, injectable-clock bucket/deadline scheduling — `core.serve`):
+
+    svc = api.make_service({"ckt": mat}, max_batch=16, max_delay=2e-3)
+    t = svc.submit("ckt", b)                     # SolveTicket
+    svc.drain();  x = t.result()                 # svc.stats / svc.cache
+
 Static analysis (DESIGN.md §8): every compile entry point takes
 ``verify_ir=True`` to run the per-pass IR contract verifiers between
 pipeline stages (a broken invariant raises `errors.IRValidationError`
@@ -98,6 +107,7 @@ __all__ = [
     "solve_upper",
     "solve_pair",
     "make_solver",
+    "make_service",
     "solve_numpy",
     "reference_solve",
     "report",
@@ -372,6 +382,50 @@ def robust_solver(prog: Program, mat: TriCSR | None = None, **opts):
     from .robust import RobustSolver
 
     return RobustSolver(prog, mat, **opts)
+
+
+def make_service(matrices=None, *, capacity: int = 32, disk_dir=None,
+                 max_batch: int = 16, max_delay: float = 1e-3,
+                 clock=None, timer=None, cfg: AccelConfig | None = None,
+                 backend: str = "jax", mesh=None, **backend_opts):
+    """Build a production solve service (`core.serve`, DESIGN.md §9).
+
+    Returns a `serve.SolveService` over a fresh `serve.ProgramCache`
+    (bounded LRU of ``capacity`` programs keyed by the structure-only
+    `serve.pattern_fingerprint`; ``disk_dir=`` adds the CRC-verified disk
+    tier that rehydrates evicted entries through `save_program` /
+    `load_program` instead of recompiling).  ``matrices`` is an optional
+    ``{matrix_id: TriCSR}`` dict to register up front; more tenants can
+    join later via ``service.register``.
+
+    Requests stream in through ``service.submit(matrix_id, b)`` (``b`` of
+    shape ``[n]`` or ``[n, k]``) and micro-batch per matrix into the
+    padded widths the batched executor cache keys on; a bucket flushes at
+    ``max_batch`` columns or when its oldest column ages past
+    ``max_delay`` seconds (checked by ``service.pump()`` /
+    at the next submit; ``service.drain()`` flushes everything).  The
+    scheduling core runs entirely on the injectable ``clock`` — here, and
+    only here, a missing clock defaults to the wall
+    (``time.monotonic``); construct `serve.SolveService` directly (or
+    pass a `serve.ManualClock`) for deterministic tests.
+
+    ``backend`` / ``mesh`` / ``backend_opts`` choose the execution path
+    per `make_solver` ("numpy", "jax", "pallas" resident/blocked, mesh
+    sharding), shared by every flush.
+    """
+    from . import serve
+
+    if clock is None:
+        import time
+
+        clock = time.monotonic
+    cache = serve.ProgramCache(capacity=capacity, disk_dir=disk_dir, cfg=cfg)
+    svc = serve.SolveService(cache, max_batch=max_batch,
+                             max_delay=max_delay, clock=clock, timer=timer,
+                             backend=backend, mesh=mesh, **backend_opts)
+    for mid, m in (matrices or {}).items():
+        svc.register(mid, m)
+    return svc
 
 
 def solve_numpy(prog: Program, b: np.ndarray) -> np.ndarray:

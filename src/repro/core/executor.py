@@ -62,6 +62,7 @@ __all__ = [
     "as_batch",
     "batched_entry",
     "build_solve_cols",
+    "cached_entries",
     "execute_numpy",
     "execute_jax",
     "make_jax_executor",
@@ -84,6 +85,16 @@ _EXEC_CACHE: "weakref.WeakKeyDictionary[Program, dict]" = weakref.WeakKeyDiction
 def trace_count() -> int:
     """Number of jax-executor traces so far (cache-hit observability)."""
     return _TRACE_COUNT
+
+
+def cached_entries(prog: Program) -> list:
+    """Keys of the per-program executor cache (cache-hit observability).
+
+    Jax entries are padded-width ints (the cache-key contract asserted in
+    `_cached_executor`); pallas entries are ``("pallas", width, *knobs)``
+    tuples.  The serving tests use this to prove micro-batch bucketing
+    never creates a key the contract forbids."""
+    return sorted(_EXEC_CACHE.get(prog, {}), key=repr)
 
 
 def pad_batch(width: int) -> int:
@@ -229,6 +240,16 @@ def _build_jax_executor(prog: Program, width: int):
 
 
 def _cached_executor(prog: Program, width: int):
+    # Cache-key contract (DESIGN.md §4/§9): jax entries are keyed by the
+    # *padded* width only — every caller rounds with `pad_batch` before
+    # lookup, so batch sizes that pad equal share one trace, and the serve
+    # layer's bucket widths (core/serve.py, which buckets with the same
+    # `pad_batch`) can never diverge from the cache keys.  An unpadded
+    # width reaching this point is a caller bug, not a cache miss.
+    if width != pad_batch(width):
+        raise AssertionError(
+            f"executor cache key must be a padded width "
+            f"(pad_batch({width}) == {pad_batch(width)}), got {width}")
     per_prog = _EXEC_CACHE.get(prog)
     if per_prog is None:
         per_prog = {}

@@ -1,0 +1,529 @@
+"""Production solve service: continuous RHS micro-batching over a
+multi-tenant program cache (DESIGN.md §9).
+
+The accelerator's economics are compile-once/solve-many: a `Program` is
+the expensive artifact, and production traffic (factorization loops,
+preconditioner sweeps) is a *stream* of ``(matrix_id, b)`` requests
+against a fleet of precompiled programs.  This module turns the batched
+executors (DESIGN.md §4) into a service facing that stream:
+
+  * `SolveService` — accepts single- or multi-column right-hand sides per
+    registered matrix and micro-batches the columns per matrix into the
+    padded widths the cached batched executors already key on
+    (`executor.pad_batch` — the one bucketing function, shared with the
+    executor cache so the two can never diverge).  A bucket flushes when
+    it reaches ``max_batch`` columns or when its deadline — arrival of
+    its oldest pending column plus ``max_delay`` — expires.  **Every
+    scheduling decision runs on an injectable clock**: the core never
+    reads wall time, so deadline-vs-full flush ordering, out-of-order
+    completion and result routing are all unit-testable without sleeps
+    (`tests/test_serve.py`).  Production callers get a real clock from
+    `api.make_service`.
+  * `ProgramCache` — a bounded LRU of compiled `Program`s keyed by
+    `pattern_fingerprint` (a structure-only hash over the CSR pattern:
+    two tenants registering the same sparsity pattern share one compile).
+    A write-through disk tier (`serialize.save_program`) lets an evicted
+    entry rehydrate through the CRC-verified `serialize.load_program`
+    instead of re-running the compiler; a corrupted blob degrades to a
+    recompile with a machine-readable `robust.Incident`, never a crash.
+    Because the compiled value plane depends on the numeric values too,
+    each entry carries a CRC of the source values — a same-pattern /
+    different-values matrix is a miss (its own disk blob), never a
+    silently wrong schedule reuse.
+  * `ServeStats` — per-entry hit/miss/compile-time counters plus flush
+    accounting (full vs deadline vs drain, batched column counts and a
+    `FlushRecord` log) so load generators (`benchmarks/serve_load.py`)
+    and dashboards read one record.
+
+Request lifecycle: ``submit`` first pumps any bucket whose deadline is
+already due (deadline flushes happen-before the new arrival), enqueues
+the request's columns, then flushes full ``max_batch`` chunks
+immediately.  ``pump(now)`` flushes due buckets in deterministic
+(deadline, arrival-order) order; ``drain()`` flushes everything.  A
+`SolveTicket` completes when its last column's bucket flushes — tickets
+of a hot matrix can complete before earlier-submitted tickets of a cold
+one, and each column routes back to exactly the ticket that submitted
+it.  Batched columns are bit-identical to per-request solves (no
+cross-column arithmetic exists in any executor), which the property
+suite (`tests/test_serve_property.py`) pins down.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import zlib
+from collections import OrderedDict
+
+import numpy as np
+
+from .csr import TriCSR
+from .errors import ProgramCorruptionError
+from .executor import execute_numpy, pad_batch, validate_backend
+from .program import AccelConfig, Program
+from .robust import Incident
+from .schedule import compile_program
+
+__all__ = [
+    "FLUSH_DEADLINE",
+    "FLUSH_DRAIN",
+    "FLUSH_FULL",
+    "CacheEntryStats",
+    "FlushRecord",
+    "ManualClock",
+    "ProgramCache",
+    "ServeStats",
+    "SolveService",
+    "SolveTicket",
+    "pattern_fingerprint",
+]
+
+FLUSH_FULL = "full"          # bucket reached max_batch columns
+FLUSH_DEADLINE = "deadline"  # oldest pending column aged past max_delay
+FLUSH_DRAIN = "drain"        # explicit drain() regardless of deadline
+
+_FP_TAG = b"sptrsv-pattern-v1"
+
+
+def pattern_fingerprint(mat: TriCSR) -> str:
+    """Structure-only fingerprint of a CSR sparsity pattern (hex, 16 chars).
+
+    Hashes ``(n, rowptr, colidx)`` and nothing else — numeric values do
+    not participate, so a factorization loop re-solving one pattern with
+    fresh values maps to one fingerprint (the cache guards value changes
+    separately with a values CRC).  Two same-shape matrices with
+    different patterns fingerprint differently.
+    """
+    h = hashlib.sha256(_FP_TAG)
+    h.update(int(mat.n).to_bytes(8, "little"))
+    h.update(np.ascontiguousarray(mat.rowptr, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(mat.colidx, dtype=np.int64).tobytes())
+    return h.hexdigest()[:16]
+
+
+def _values_crc(mat: TriCSR) -> int:
+    return zlib.crc32(np.ascontiguousarray(mat.values,
+                                           dtype=np.float64).tobytes())
+
+
+@dataclasses.dataclass
+class CacheEntryStats:
+    """Per-fingerprint counters of one `ProgramCache` entry."""
+
+    fingerprint: str
+    name: str = ""
+    hits: int = 0            # served from the in-memory LRU
+    disk_hits: int = 0       # rehydrated from the disk tier (no compile)
+    compiles: int = 0        # compiler runs (cold miss or corrupt blob)
+    disk_corrupt: int = 0    # disk blobs rejected by CRC/structural verify
+    compile_seconds: float = 0.0
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class ProgramCache:
+    """Bounded LRU of compiled `Program`s with a CRC-verified disk tier.
+
+    ``capacity`` bounds the in-memory tier (LRU eviction).  ``disk_dir``
+    (optional) enables the disk tier: every compile is written through
+    (`serialize.save_program`), so an evicted entry rehydrates via the
+    checksummed `serialize.load_program` instead of re-running the
+    compiler.  A corrupt blob is removed, recorded as a
+    `robust.Incident` (``kind="disk-corrupt"``) in ``incidents``, and
+    the entry recompiles — corruption can degrade performance, never
+    correctness.  ``get`` is keyed by `pattern_fingerprint`; a values
+    CRC rides along so same-pattern/different-values matrices never
+    share a program (they do share a fingerprint and get distinct disk
+    blobs).
+    """
+
+    def __init__(self, capacity: int = 32, disk_dir=None,
+                 cfg: AccelConfig | None = None, compile_fn=None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self.disk_dir = os.fspath(disk_dir) if disk_dir is not None else None
+        self._cfg = cfg
+        self._compile = compile_fn or (lambda m: compile_program(m, cfg))
+        self._mem: "OrderedDict[str, tuple[Program, int]]" = OrderedDict()
+        self.entries: dict[str, CacheEntryStats] = {}
+        self.incidents: list[Incident] = []
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._mem)
+
+    def fingerprints(self) -> list[str]:
+        """In-memory fingerprints, least- to most-recently used."""
+        return list(self._mem)
+
+    def _path(self, fp: str, vcrc: int) -> str | None:
+        if self.disk_dir is None:
+            return None
+        return os.path.join(self.disk_dir, f"{fp}.{vcrc:08x}.prog")
+
+    def _entry(self, fp: str, name: str) -> CacheEntryStats:
+        ent = self.entries.get(fp)
+        if ent is None:
+            ent = CacheEntryStats(fingerprint=fp, name=name)
+            self.entries[fp] = ent
+        return ent
+
+    # ------------------------------------------------------------------
+    def get(self, mat: TriCSR) -> Program:
+        """The compiled program for ``mat``'s pattern+values, through the
+        tiers: memory LRU -> disk rehydrate -> compile (write-through)."""
+        fp = pattern_fingerprint(mat)
+        vcrc = _values_crc(mat)
+        ent = self._entry(fp, mat.name)
+        cached = self._mem.get(fp)
+        if cached is not None:
+            prog, crc = cached
+            if crc == vcrc:
+                self._mem.move_to_end(fp)
+                ent.hits += 1
+                self.hits += 1
+                return prog
+            # same pattern, new numeric values: the schedule would be
+            # reusable (ROADMAP: recompile_values) but today the whole
+            # program re-emits; the stale entry is replaced below.
+            del self._mem[fp]
+        self.misses += 1
+        prog = self._rehydrate(fp, vcrc, ent)
+        if prog is None:
+            prog = self._compile(mat)
+            ent.compiles += 1
+            ent.compile_seconds += float(prog.stats.compile_seconds or 0.0)
+            self._write_through(fp, vcrc, prog)
+        self._insert(fp, vcrc, prog)
+        return prog
+
+    def _rehydrate(self, fp: str, vcrc: int,
+                   ent: CacheEntryStats) -> Program | None:
+        path = self._path(fp, vcrc)
+        if path is None or not os.path.exists(path):
+            return None
+        from .serialize import load_program
+
+        try:
+            prog = load_program(path)  # CRC + structural verify
+        except ProgramCorruptionError as e:
+            ent.disk_corrupt += 1
+            self.incidents.append(Incident(
+                stage="program-cache", kind="disk-corrupt",
+                message=f"disk entry for {fp} rejected, recompiling: {e}",
+                error=type(e).__name__,
+                detail={"fingerprint": fp, "path": path}))
+            os.remove(path)
+            return None
+        ent.disk_hits += 1
+        return prog
+
+    def _write_through(self, fp: str, vcrc: int, prog: Program) -> None:
+        path = self._path(fp, vcrc)
+        if path is None:
+            return
+        from .serialize import save_program
+
+        os.makedirs(self.disk_dir, exist_ok=True)
+        save_program(prog, path)
+
+    def _insert(self, fp: str, vcrc: int, prog: Program) -> None:
+        self._mem[fp] = (prog, vcrc)
+        self._mem.move_to_end(fp)
+        while len(self._mem) > self.capacity:
+            self._mem.popitem(last=False)
+            self.evictions += 1
+
+    def stats_dict(self) -> dict:
+        return {
+            "hits": self.hits, "misses": self.misses,
+            "evictions": self.evictions, "resident": len(self._mem),
+            "capacity": self.capacity,
+            "incidents": len(self.incidents),
+            "entries": {fp: e.to_dict() for fp, e in self.entries.items()},
+        }
+
+
+# ---------------------------------------------------------------------------
+# service
+# ---------------------------------------------------------------------------
+class ManualClock:
+    """Deterministic injectable clock: returns ``now`` until advanced."""
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> float:
+        self.now += float(dt)
+        return self.now
+
+
+class SolveTicket:
+    """Routing handle for one submitted request.
+
+    Completes when the last of its columns has been solved (columns of a
+    wide request can span several flushes).  ``result()`` returns ``[n]``
+    for a 1-D submit and ``[n, k]`` for a 2-D one; calling it before the
+    ticket is done raises (pump or drain the service first).
+    """
+
+    def __init__(self, matrix_id: str, n: int, k: int, single: bool,
+                 submitted_at: float):
+        self.matrix_id = matrix_id
+        self.columns = k
+        self.submitted_at = submitted_at
+        self.completed_at: float | None = None
+        self.flush_indices: list[int] = []
+        self._single = single
+        self._x: np.ndarray | None = None
+        self._n = n
+        self._remaining = k
+        if k == 0:  # degenerate [n, 0] request: nothing to solve
+            self._x = np.zeros((n, 0), dtype=np.float32)
+            self.completed_at = submitted_at
+
+    @property
+    def done(self) -> bool:
+        return self._remaining == 0
+
+    def _deliver(self, j: int, col: np.ndarray, flush_index: int,
+                 at: float) -> None:
+        if self._x is None:
+            self._x = np.empty((self._n, self.columns), dtype=col.dtype)
+        self._x[:, j] = col
+        self._remaining -= 1
+        if flush_index not in self.flush_indices:
+            self.flush_indices.append(flush_index)
+        if self._remaining == 0:
+            self.completed_at = at
+
+    def result(self) -> np.ndarray:
+        if not self.done:
+            raise RuntimeError(
+                f"ticket for {self.matrix_id!r} not complete "
+                f"({self._remaining}/{self.columns} columns pending) — "
+                f"pump() or drain() the service")
+        return self._x[:, 0] if self._single else self._x
+
+
+@dataclasses.dataclass
+class FlushRecord:
+    """One executed micro-batch (the unit `benchmarks/serve_load.py`
+    replays for its queueing model)."""
+
+    index: int
+    matrix_id: str
+    reason: str        # FLUSH_FULL | FLUSH_DEADLINE | FLUSH_DRAIN
+    columns: int       # real RHS columns solved
+    padded: int        # executor batch width (pad_batch of columns)
+    at: float          # injectable-clock time the flush ran
+    service_s: float   # measured solve wall time (0.0 without a timer)
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Aggregate service counters + the per-entry cache counters."""
+
+    requests: int = 0
+    columns: int = 0
+    completed_columns: int = 0
+    solver_calls: int = 0
+    batched_columns: int = 0   # columns solved in flushes of >1 column
+    flushes_full: int = 0
+    flushes_deadline: int = 0
+    flushes_drain: int = 0
+    flushes: list = dataclasses.field(default_factory=list)
+    cache: dict = dataclasses.field(default_factory=dict)
+
+    def flush_count(self) -> int:
+        return self.flushes_full + self.flushes_deadline + self.flushes_drain
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["flushes"] = [dataclasses.asdict(f) if dataclasses.is_dataclass(f)
+                        else f for f in self.flushes]
+        return d
+
+
+class SolveService:
+    """Continuous micro-batching front end over a `ProgramCache`.
+
+    ``clock`` is any ``() -> float`` callable; the default is a
+    `ManualClock` at 0.0 so the core is deterministic out of the box
+    (production passes ``time.monotonic`` via `api.make_service`).
+    ``timer`` (optional ``() -> float``) measures solve wall time for
+    `FlushRecord.service_s` — left unset, records carry 0.0 and the core
+    stays wall-clock-free.  ``backend`` is "numpy", "jax" or "pallas"
+    (+ ``mesh=`` and the `api.make_solver` knobs); bucketing uses
+    `executor.pad_batch`, the same rounding the executor cache keys on,
+    so a service never provokes more than one trace per (program, padded
+    width, backend knobs).
+    """
+
+    def __init__(self, cache: ProgramCache | None = None, *,
+                 max_batch: int = 16, max_delay: float = 1e-3,
+                 clock=None, timer=None, backend: str = "jax", mesh=None,
+                 **backend_opts):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_delay < 0:
+            raise ValueError(f"max_delay must be >= 0, got {max_delay}")
+        if backend == "numpy":
+            if mesh is not None or backend_opts:
+                raise ValueError("backend='numpy' takes no mesh/extra options")
+        else:
+            validate_backend(backend, {} if backend == "jax"
+                             else backend_opts)
+        self.cache = cache if cache is not None else ProgramCache()
+        self.max_batch = int(max_batch)
+        self.max_delay = float(max_delay)
+        self.backend = backend
+        self.mesh = mesh
+        self.backend_opts = backend_opts
+        self._clock = clock if clock is not None else ManualClock()
+        self._timer = timer
+        self._mats: dict[str, TriCSR] = {}
+        # matrix_id -> list of (seq, arrival, ticket, column_index, column)
+        self._pending: dict[str, list] = {}
+        self._seq = 0
+        self.stats = ServeStats()
+
+    # ------------------------------------------------------------------
+    def register(self, matrix_id: str, mat: TriCSR) -> str:
+        """Register a tenant matrix; returns its pattern fingerprint.
+
+        Registration only records the matrix — compilation happens on
+        the first flush, through the cache tiers (so two ids sharing one
+        pattern+values compile once)."""
+        if matrix_id in self._mats:
+            raise ValueError(f"matrix_id {matrix_id!r} already registered")
+        self._mats[matrix_id] = mat
+        return pattern_fingerprint(mat)
+
+    def matrix_ids(self) -> list[str]:
+        return list(self._mats)
+
+    def pending_columns(self, matrix_id: str | None = None) -> int:
+        if matrix_id is not None:
+            return len(self._pending.get(matrix_id, ()))
+        return sum(len(v) for v in self._pending.values())
+
+    # ------------------------------------------------------------------
+    def submit(self, matrix_id: str, b: np.ndarray, *,
+               now: float | None = None) -> SolveTicket:
+        """Enqueue a right-hand side; returns its `SolveTicket`.
+
+        Order of effects: (1) pump every bucket whose deadline is already
+        due — deadline flushes happen-before the new arrival; (2) enqueue
+        the request's columns; (3) flush full ``max_batch`` chunks of
+        this bucket immediately (a wide request can trigger several)."""
+        mat = self._mats.get(matrix_id)
+        if mat is None:
+            raise KeyError(f"unknown matrix_id {matrix_id!r} "
+                           f"(registered: {sorted(self._mats)})")
+        b = np.asarray(b)
+        single = b.ndim == 1
+        bmat = b[:, None] if single else b
+        if bmat.ndim != 2 or bmat.shape[0] != mat.n:
+            raise ValueError(
+                f"expected b of shape ({mat.n},) or ({mat.n}, k) for "
+                f"{matrix_id!r}, got {b.shape}")
+        t = self._clock() if now is None else float(now)
+        self.pump(now=t)
+        k = bmat.shape[1]
+        ticket = SolveTicket(matrix_id, mat.n, k, single, t)
+        self.stats.requests += 1
+        self.stats.columns += k
+        if k == 0:
+            return ticket
+        bucket = self._pending.setdefault(matrix_id, [])
+        for j in range(k):
+            bucket.append((self._seq, t, ticket, j, bmat[:, j]))
+            self._seq += 1
+        # _flush replaces the pending list, so re-read it each iteration
+        while len(self._pending.get(matrix_id, ())) >= self.max_batch:
+            self._flush(matrix_id, t, FLUSH_FULL, count=self.max_batch)
+        return ticket
+
+    def pump(self, now: float | None = None) -> int:
+        """Flush every bucket whose deadline has expired at ``now``
+        (default: the injected clock).  Buckets flush in deterministic
+        (deadline, arrival-order) order; returns the number of flushes."""
+        t = self._clock() if now is None else float(now)
+        n_flushed = 0
+        while True:
+            due = [(arr + self.max_delay, bucket[0][0], mid)
+                   for mid, bucket in self._pending.items()
+                   for arr in (bucket[0][1],)
+                   if arr + self.max_delay <= t]
+            if not due:
+                return n_flushed
+            _, _, mid = min(due)
+            self._flush(mid, t, FLUSH_DEADLINE)
+            n_flushed += 1
+
+    def drain(self, now: float | None = None) -> int:
+        """Flush everything pending regardless of deadline (shutdown /
+        end-of-stream); returns the number of flushes."""
+        t = self._clock() if now is None else float(now)
+        n_flushed = 0
+        while self._pending:
+            mid = min(self._pending, key=lambda m: self._pending[m][0][0])
+            self._flush(mid, t, FLUSH_DRAIN)
+            n_flushed += 1
+        return n_flushed
+
+    # ------------------------------------------------------------------
+    def _solver(self, prog: Program, k: int):
+        if self.backend == "numpy":
+            return lambda bmat: execute_numpy(prog, bmat)
+        from .api import make_solver
+
+        return make_solver(prog, batch=k, mesh=self.mesh,
+                           backend=self.backend, **self.backend_opts)
+
+    def _flush(self, matrix_id: str, now: float, reason: str,
+               count: int | None = None) -> None:
+        bucket = self._pending[matrix_id]
+        if count is None:
+            take, rest = bucket, []
+        else:
+            take, rest = bucket[:count], bucket[count:]
+        if rest:
+            self._pending[matrix_id] = rest
+        else:
+            del self._pending[matrix_id]
+        k = len(take)
+        prog = self.cache.get(self._mats[matrix_id])
+        bmat = np.stack([col for (_, _, _, _, col) in take], axis=1)
+        solve = self._solver(prog, k)
+        t0 = self._timer() if self._timer is not None else 0.0
+        x = np.asarray(solve(bmat))
+        dt = (self._timer() - t0) if self._timer is not None else 0.0
+        st = self.stats
+        index = st.flush_count()
+        if reason == FLUSH_FULL:
+            st.flushes_full += 1
+        elif reason == FLUSH_DEADLINE:
+            st.flushes_deadline += 1
+        else:
+            st.flushes_drain += 1
+        st.solver_calls += 1
+        st.completed_columns += k
+        if k > 1:
+            st.batched_columns += k
+        st.flushes.append(FlushRecord(
+            index=index, matrix_id=matrix_id, reason=reason, columns=k,
+            padded=pad_batch(k), at=now, service_s=dt))
+        for i, (_, _, ticket, j, _) in enumerate(take):
+            ticket._deliver(j, x[:, i], index, now)
+        st.cache = self.cache.stats_dict()
