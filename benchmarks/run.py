@@ -25,6 +25,7 @@ from . import (
     platform_comparison,
     psum_sweep,
     robust_overhead,
+    serve_chaos,
     serve_load,
     sharded_batch,
     suite_stats,
@@ -46,6 +47,7 @@ MODULES = {
     "robust": robust_overhead,
     "analysis": analysis_overhead,
     "serve": serve_load,
+    "chaos": serve_chaos,
 }
 
 

@@ -1,0 +1,303 @@
+"""Serve-chaos benchmark: goodput + tail latency under injected faults.
+
+    PYTHONPATH=src python -m benchmarks.serve_chaos            # full, CSV
+    PYTHONPATH=src python -m benchmarks.serve_chaos --record   # + BENCH_serve_chaos.json
+    PYTHONPATH=src python -m benchmarks.serve_chaos --smoke    # tier-1 guard
+
+Measures what the resilient serving layer (DESIGN.md §10) actually buys
+under fire.  One seeded fault campaign per class — backend exceptions,
+non-finite outputs, simulated hangs, overload bursts, and expired
+deadlines — runs an open-loop request stream against a resilient
+`SolveService` on a virtual clock, with faults injected into the entry
+backend rung.  Per class we report *goodput* (fraction of offered
+requests answered correctly), typed failures and sheds (never silent),
+p50/p99 completion latency on the virtual timeline, retries, degraded
+flushes, and incident volume.  Every completed answer is residual-checked
+against the retained matrix, so the ``silent_wrong`` column is a
+measurement, not an assumption.
+
+The fault-free row doubles as the overhead gate: the same stream runs
+with resilience off and on (measured flush wall time, best of
+``--repeat``), and ``overhead_pct`` must stay within a few percent —
+deadlines, breakers, and admission checks are bookkeeping, not solving.
+
+``--smoke`` (wired into tier-1 via `tests/test_resilience.py`) runs the
+chaos sweep plus `robust.run_service_fault_injection` across seeds and
+asserts zero silent wrong answers, zero deadlocks, and bounded overhead.
+``--record`` appends a dated entry to ``BENCH_serve_chaos.json``
+(schema pinned by ``scripts/check_bench.py``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.csr import serial_solve
+from repro.core.errors import RobustnessError
+from repro.core.matrices import banded, generate
+from repro.core.resilience import (
+    AdmissionConfig,
+    BreakerConfig,
+    ResilienceConfig,
+    RetryPolicy,
+)
+from repro.core.robust import SERVICE_FAULT_CLASSES, run_service_fault_injection
+from repro.core.serve import ManualClock, ProgramCache, SolveService
+
+from .common import emit
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_serve_chaos.json")
+BENCH_SCHEMA = "sptrsv-bench-serve-chaos"
+BENCH_VERSION = 1
+
+# the measured campaign classes (superset of "none", the overhead row)
+FAULTS = ("none", "backend_exception", "backend_nonfinite", "backend_hang",
+          "overload_burst", "expired_deadline")
+FLUSH_TIMEOUT_S = 0.25
+
+
+def _resilience(fault: str, seed: int) -> ResilienceConfig:
+    burst = fault == "overload_burst"
+    return ResilienceConfig(
+        retry=RetryPolicy(max_retries=1, base_delay_s=0.005, seed=seed),
+        breaker=BreakerConfig(window_s=50.0, min_samples=4,
+                              failure_threshold=0.75, cooldown_s=5.0),
+        admission=AdmissionConfig(max_pending_per_matrix=6 if burst else None,
+                                  max_pending_total=10 if burst else None),
+        flush_timeout_s=FLUSH_TIMEOUT_S)
+
+
+def _inject(svc: SolveService, clock: ManualClock, fault: str, rng,
+            rate: float):
+    """Wrap the service's entry ("numpy") rung with seeded faults."""
+    if fault in ("none", "overload_burst", "expired_deadline"):
+        return
+    orig = svc._stage_solver
+
+    def wrapped(stage, prog, k, mat):
+        fn = orig(stage, prog, k, mat)
+        if stage != "numpy":
+            return fn
+
+        def chaotic(bmat):
+            if rng.random() < rate:
+                if fault == "backend_exception":
+                    raise RuntimeError("injected backend fault")
+                if fault == "backend_hang":
+                    clock.advance(FLUSH_TIMEOUT_S * 2)  # simulated stall
+                    return np.asarray(fn(bmat))
+                x = np.asarray(fn(bmat)).copy()       # backend_nonfinite
+                x.flat[int(rng.integers(x.size))] = np.nan
+                return x
+            return np.asarray(fn(bmat))
+        return chaotic
+
+    svc._stage_solver = wrapped
+
+
+def _drive(mat, fault: str, requests: int, seed: int,
+           resilient: bool = True):
+    """One open-loop campaign on the virtual clock; returns row pieces."""
+    rng = np.random.default_rng(seed * 7919 + len(fault))
+    clock = ManualClock()
+    svc = SolveService(ProgramCache(capacity=4), max_batch=4, max_delay=0.05,
+                       clock=clock, timer=time.perf_counter, backend="numpy",
+                       resilience=_resilience(fault, seed)
+                       if resilient else None)
+    svc.register(mat.name, mat)
+    svc.submit(mat.name, np.zeros(mat.n, np.float32))  # warm compile
+    svc.drain()
+    warm_flushes = len(svc.stats.flushes)
+    _inject(svc, clock, fault, rng, rate=0.5)
+
+    tickets = []
+    for _ in range(requests):
+        k = int(rng.integers(1, 9 if fault == "overload_burst" else 4))
+        b = rng.standard_normal((mat.n, k)).astype(np.float32)
+        kw = {}
+        if fault == "expired_deadline":
+            r = rng.random()
+            if r < 0.25:
+                kw["timeout"] = -0.1          # already expired at submit
+            elif r < 0.5:
+                kw["timeout"] = 0.01          # tight: races the flush
+        arrival = clock.now
+        tickets.append((svc.submit(mat.name, b, **kw), arrival, b))
+        clock.advance(float(rng.uniform(0.0, 0.04)))
+        svc.pump()
+    clock.advance(1.0)
+    svc.pump()
+    svc.drain()
+    return svc, tickets, warm_flushes
+
+
+def _residual_ok(mat, x, b, tol: float = 1e-3) -> bool:
+    x2 = np.asarray(x, np.float64).reshape(mat.n, -1)
+    b2 = np.asarray(b, np.float64).reshape(mat.n, -1)
+    dense = mat.to_dense()
+    r = b2 - dense @ x2
+    denom = max(float(np.abs(b2).max()), 1e-30)
+    return bool(np.isfinite(x2).all()) and \
+        float(np.abs(r).max()) / denom <= tol
+
+
+def bench_fault(mat, fault: str, requests: int, seed: int) -> dict:
+    svc, tickets, _ = _drive(mat, fault, requests, seed)
+    completed = failed = shed = silent = not_done = 0
+    lat = []
+    for ticket, arrival, b in tickets:
+        if ticket.shed:
+            shed += 1
+            continue
+        if not ticket.done:
+            not_done += 1
+            continue
+        if ticket.failed:
+            failed += 1 if isinstance(ticket.error, RobustnessError) else 0
+            silent += 0 if isinstance(ticket.error, RobustnessError) else 1
+            continue
+        if _residual_ok(mat, ticket.result(), b):
+            completed += 1
+            lat.append(ticket.completed_at - arrival)
+        else:
+            silent += 1
+    st = svc.stats
+    lat_arr = np.asarray(lat) if lat else np.asarray([0.0])
+    return {
+        "fault": fault,
+        "requests": requests,
+        "goodput": round(completed / requests, 3),
+        "completed": completed,
+        "failed_typed": failed,
+        "shed": shed,
+        "silent_wrong": silent + not_done,
+        "p50_virtual_ms": round(float(np.percentile(lat_arr, 50)) * 1e3, 2),
+        "p99_virtual_ms": round(float(np.percentile(lat_arr, 99)) * 1e3, 2),
+        "retries": st.retries,
+        "degraded_flushes": st.degraded_flushes,
+        "incidents": len(svc.incidents) + svc.incidents.dropped,
+    }
+
+
+def measure_overhead(mat, requests: int, seed: int, repeat: int) -> float:
+    """Fault-free end-to-end serve wall time: resilient vs plain.
+
+    Per-flush timer sums are µs-scale and noise-dominated on small
+    matrices, so this times the whole submit/pump/drain stream (virtual
+    clock — no sleeps), interleaves the two configs, and takes the best
+    of ``repeat`` runs each."""
+    cache = ProgramCache(capacity=2)
+
+    def once(resilient: bool) -> float:
+        rng = np.random.default_rng(seed)
+        clock = ManualClock()
+        svc = SolveService(cache, max_batch=4, max_delay=0.05, clock=clock,
+                           backend="numpy",
+                           resilience=_resilience("none", seed)
+                           if resilient else None)
+        svc.register(mat.name, mat)
+        svc.submit(mat.name, np.zeros(mat.n, np.float32))  # warm
+        svc.drain()
+        cols = rng.standard_normal((mat.n, requests, 3)).astype(np.float32)
+        t0 = time.perf_counter()
+        for i in range(requests):
+            svc.submit(mat.name, cols[:, i])
+            clock.advance(0.02)
+            svc.pump()
+        clock.advance(1.0)
+        svc.pump()
+        svc.drain()
+        return time.perf_counter() - t0
+
+    once(False), once(True)  # warm both paths (trace + allocator)
+    # paired adjacent runs + median-of-ratios: host drift (frequency
+    # scaling, noisy neighbours) hits both halves of a pair equally
+    ratios = []
+    for i in range(max(repeat, 3)):
+        if i % 2 == 0:
+            p, r = once(False), once(True)
+        else:
+            r, p = once(True), once(False)
+        ratios.append(r / p)
+    return (float(np.median(ratios)) - 1.0) * 100.0
+
+
+def run(requests: int, seed: int, repeat: int, matrix: str) -> tuple:
+    mat = generate(matrix) if matrix else banded(96, 6, 0.5, seed=3,
+                                                 name="chaos-bench")
+    rows = [bench_fault(mat, fault, requests, seed) for fault in FAULTS]
+    overhead = measure_overhead(mat, requests, seed, repeat)
+    return rows, overhead, mat
+
+
+def record_trajectory(rows, overhead_pct: float, seed: int,
+                      label: str) -> None:
+    """Append a dated entry to the BENCH_serve_chaos.json trajectory."""
+    doc = {"schema": BENCH_SCHEMA, "version": BENCH_VERSION, "entries": []}
+    if os.path.exists(BENCH_JSON):
+        with open(BENCH_JSON) as f:
+            doc = json.load(f)
+    doc["entries"].append({
+        "recorded": time.strftime("%Y-%m-%d"),
+        "label": label,
+        "host": "cpu-interpret",
+        "seed": seed,
+        "overhead_pct": round(overhead_pct, 2),
+        "rows": rows,
+    })
+    with open(BENCH_JSON, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# trajectory entry #{len(doc['entries'])} -> {BENCH_JSON}")
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--record", action="store_true",
+                    help="append results to BENCH_serve_chaos.json")
+    ap.add_argument("--label", default="serve-chaos")
+    ap.add_argument("--matrix", default="")
+    ap.add_argument("--requests", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--repeat", type=int, default=3)
+    args = ap.parse_args(argv)
+    requests = args.requests or (16 if args.smoke else 48)
+    if args.smoke:
+        args.repeat = max(args.repeat, 5)
+
+    rows, overhead, _ = run(requests, args.seed, args.repeat, args.matrix)
+
+    if args.smoke:
+        for r in rows:
+            assert r["silent_wrong"] == 0, (
+                f"{r['fault']}: {r['silent_wrong']} silent wrong answers")
+            assert r["completed"] + r["failed_typed"] + r["shed"] \
+                == r["requests"], f"{r['fault']}: ticket accounting leaks"
+        assert rows[0]["goodput"] == 1.0, "fault-free goodput must be 1.0"
+        assert overhead <= 5.0, (
+            f"resilience overhead {overhead:.1f}% > 5% on fault-free serve")
+        for res in run_service_fault_injection(seed=args.seed, requests=10):
+            assert res["silent_wrong"] == 0 and not res["deadlocked"], res
+        worst = min(r["goodput"] for r in rows)
+        print(f"# smoke: {len(rows)} fault classes, goodput {worst}-1.0, "
+              f"0 silent wrong, 0 deadlocks, resilience overhead "
+              f"{overhead:.1f}% (bar: <= 5%), harness classes "
+              f"{len(SERVICE_FAULT_CLASSES)} clean")
+        return
+
+    emit(rows, "serve_chaos")
+    print(f"# fault-free resilience overhead {overhead:.2f}% "
+          f"(acceptance bar: <= 5%)")
+    if args.record:
+        record_trajectory(rows, overhead, args.seed, args.label)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,14 +1,15 @@
 #!/usr/bin/env python
-"""BENCH_serve.json schema check: the perf trajectory stays machine-readable.
+"""Bench-trajectory schema check: the perf history stays machine-readable.
 
-``BENCH_serve.json`` is the repo's perf *trajectory* — every
-``benchmarks/serve_load.py --record`` run appends a dated entry, so
-re-anchors can read a curve instead of a single CSV snapshot.  A
-trajectory is only useful if every entry still parses years later, so
-this check pins the schema: top-level envelope, per-entry metadata, and
-the per-matrix row fields with their types.  Runs standalone
-(``python scripts/check_bench.py``) and as a tier-1 test
-(`tests/test_serve.py`).
+The repo keeps two perf *trajectory* files — ``BENCH_serve.json``
+(appended by ``benchmarks/serve_load.py --record``) and
+``BENCH_serve_chaos.json`` (appended by ``benchmarks/serve_chaos.py
+--record``) — so re-anchors can read a curve instead of a single CSV
+snapshot.  A trajectory is only useful if every entry still parses years
+later, so this check pins both schemas: top-level envelope, per-entry
+metadata, and the per-row fields with their types.  Runs standalone
+(``python scripts/check_bench.py``) and as tier-1 tests
+(`tests/test_serve.py`, `tests/test_resilience.py`).
 """
 
 from __future__ import annotations
@@ -19,9 +20,12 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 BENCH_JSON = REPO / "BENCH_serve.json"
+CHAOS_JSON = REPO / "BENCH_serve_chaos.json"
 
 SCHEMA = "sptrsv-bench-serve"
 VERSION = 1
+CHAOS_SCHEMA = "sptrsv-bench-serve-chaos"
+CHAOS_VERSION = 1
 
 # required per-row fields -> accepted types
 ROW_FIELDS = {
@@ -43,27 +47,52 @@ ENTRY_FIELDS = {
     "rows": list,
 }
 
+CHAOS_ROW_FIELDS = {
+    "fault": str,
+    "requests": int,
+    "goodput": (int, float),
+    "completed": int,
+    "failed_typed": int,
+    "shed": int,
+    "silent_wrong": int,
+    "p50_virtual_ms": (int, float),
+    "p99_virtual_ms": (int, float),
+    "retries": int,
+    "degraded_flushes": int,
+    "incidents": int,
+}
+CHAOS_ENTRY_FIELDS = {
+    "recorded": str,
+    "label": str,
+    "host": str,
+    "seed": int,
+    "overhead_pct": (int, float),
+    "rows": list,
+}
 
-def check(path: Path = BENCH_JSON) -> list[str]:
-    """Return a list of human-readable problems (empty == clean)."""
+
+def _check_file(path: Path, schema: str, version: int, entry_fields: dict,
+                row_fields: dict, creator: str) -> list[str]:
+    """Validate one trajectory file; returns human-readable problems."""
     if not path.exists():
-        return [f"{path.name} missing (run benchmarks/serve_load.py "
-                f"--record to create it)"]
+        return [f"{path.name} missing (run {creator} --record to create it)"]
     try:
         doc = json.loads(path.read_text())
     except json.JSONDecodeError as e:
         return [f"{path.name}: not valid JSON ({e})"]
     problems: list[str] = []
-    if doc.get("schema") != SCHEMA:
-        problems.append(f"schema must be {SCHEMA!r}, got {doc.get('schema')!r}")
-    if doc.get("version") != VERSION:
-        problems.append(f"version must be {VERSION}, got {doc.get('version')!r}")
+    if doc.get("schema") != schema:
+        problems.append(f"{path.name}: schema must be {schema!r}, "
+                        f"got {doc.get('schema')!r}")
+    if doc.get("version") != version:
+        problems.append(f"{path.name}: version must be {version}, "
+                        f"got {doc.get('version')!r}")
     entries = doc.get("entries")
     if not isinstance(entries, list) or not entries:
-        return problems + ["entries must be a non-empty list"]
+        return problems + [f"{path.name}: entries must be a non-empty list"]
     for i, entry in enumerate(entries):
-        where = f"entries[{i}]"
-        for field, typ in ENTRY_FIELDS.items():
+        where = f"{path.name}:entries[{i}]"
+        for field, typ in entry_fields.items():
             if not isinstance(entry.get(field), typ):
                 problems.append(f"{where}.{field}: expected {typ}, "
                                 f"got {entry.get(field)!r}")
@@ -76,7 +105,7 @@ def check(path: Path = BENCH_JSON) -> list[str]:
         if isinstance(rows, list) and not rows:
             problems.append(f"{where}.rows: empty")
         for j, row in enumerate(rows if isinstance(rows, list) else []):
-            for field, typ in ROW_FIELDS.items():
+            for field, typ in row_fields.items():
                 if not isinstance(row.get(field), typ) or \
                         isinstance(row.get(field), bool):
                     problems.append(
@@ -85,18 +114,32 @@ def check(path: Path = BENCH_JSON) -> list[str]:
     return problems
 
 
+def check(path: Path = BENCH_JSON) -> list[str]:
+    """Validate the serve-load trajectory (empty == clean)."""
+    return _check_file(path, SCHEMA, VERSION, ENTRY_FIELDS, ROW_FIELDS,
+                       "benchmarks/serve_load.py")
+
+
+def check_chaos(path: Path = CHAOS_JSON) -> list[str]:
+    """Validate the serve-chaos trajectory (empty == clean)."""
+    return _check_file(path, CHAOS_SCHEMA, CHAOS_VERSION, CHAOS_ENTRY_FIELDS,
+                       CHAOS_ROW_FIELDS, "benchmarks/serve_chaos.py")
+
+
 def main() -> int:
-    problems = check()
+    problems = check() + check_chaos()
     for p in problems:
         print(f"check_bench: {p}", file=sys.stderr)
     if problems:
         print(f"check_bench: {len(problems)} schema problem(s)",
               file=sys.stderr)
         return 1
-    doc = json.loads(BENCH_JSON.read_text())
-    n_rows = sum(len(e["rows"]) for e in doc["entries"])
-    print(f"check_bench: OK ({len(doc['entries'])} trajectory entr"
-          f"{'y' if len(doc['entries']) == 1 else 'ies'}, {n_rows} rows)")
+    for path in (BENCH_JSON, CHAOS_JSON):
+        doc = json.loads(path.read_text())
+        n_rows = sum(len(e["rows"]) for e in doc["entries"])
+        print(f"check_bench: {path.name} OK ({len(doc['entries'])} "
+              f"trajectory entr{'y' if len(doc['entries']) == 1 else 'ies'}, "
+              f"{n_rows} rows)")
     return 0
 
 

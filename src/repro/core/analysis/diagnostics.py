@@ -67,6 +67,20 @@ CODES: dict[str, str] = {
     "SPT205": "row envelope admits no blocked placement window",
     "SPT206": "PE utilization below threshold",
     "SPT207": "bank-conflict replay density above threshold",
+    # -- serving / resilience incidents (DESIGN.md §10) ---------------------
+    # `serve.SolveService.report()` renders every `robust.Incident` of the
+    # serving layer through these codes, so breaker transitions, shed
+    # events and degradations come out of the same machine-readable
+    # Diagnostic JSON the static analyzer emits.
+    "SPT301": "serving: backend execution failure during a flush",
+    "SPT302": "serving: unhealthy solve output (non-finite / residual)",
+    "SPT303": "serving: request deadline exceeded",
+    "SPT304": "serving: circuit breaker state transition",
+    "SPT305": "serving: request shed by admission control",
+    "SPT306": "serving: program-cache disk tier rejected a corrupt blob",
+    "SPT307": "serving: flush retried with backoff",
+    "SPT308": "serving: stage exceeded the flush timeout (hang)",
+    "SPT309": "serving: incident log saturated, oldest records dropped",
 }
 
 

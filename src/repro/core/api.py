@@ -98,6 +98,7 @@ from .schedule import compile_program
 __all__ = [
     "matrix",
     "compile",
+    "recompile_values",
     "compile_dag",
     "compile_upper",
     "compile_pair",
@@ -133,6 +134,21 @@ def matrix(name: str) -> TriCSR:
 def compile(mat: TriCSR, cfg: AccelConfig | None = None, *,  # noqa: A001
             verify_ir: bool = False) -> Program:
     return compile_program(mat, cfg, verify_ir=verify_ir)
+
+
+def recompile_values(prog: Program, mat: TriCSR) -> Program:
+    """Values-only recompilation for factorization loops (DESIGN.md §10).
+
+    ``mat`` must share the compiled program's sparsity pattern; the
+    schedule is reused and only the value stream regathers through the
+    program's provenance plane — a *new* `Program` (executor caches key
+    on identity), bit-identical to a full recompile, at a fraction of
+    the cost.  Raises ``ValueError`` on a pattern mismatch or a program
+    serialized before provenance existed (run `compile` instead).
+    """
+    from .schedule import recompile_values as _recompile
+
+    return _recompile(prog, mat)
 
 
 def solve(prog: Program, b: np.ndarray) -> np.ndarray:
@@ -387,7 +403,8 @@ def robust_solver(prog: Program, mat: TriCSR | None = None, **opts):
 def make_service(matrices=None, *, capacity: int = 32, disk_dir=None,
                  max_batch: int = 16, max_delay: float = 1e-3,
                  clock=None, timer=None, cfg: AccelConfig | None = None,
-                 backend: str = "jax", mesh=None, **backend_opts):
+                 backend: str = "jax", mesh=None, resilience=None,
+                 **backend_opts):
     """Build a production solve service (`core.serve`, DESIGN.md §9).
 
     Returns a `serve.SolveService` over a fresh `serve.ProgramCache`
@@ -412,6 +429,15 @@ def make_service(matrices=None, *, capacity: int = 32, disk_dir=None,
     ``backend`` / ``mesh`` / ``backend_opts`` choose the execution path
     per `make_solver` ("numpy", "jax", "pallas" resident/blocked, mesh
     sharding), shared by every flush.
+
+    ``resilience`` (a `resilience.ResilienceConfig`, DESIGN.md §10) arms
+    the resilient flush path: per-request deadlines
+    (``submit(..., deadline=|timeout=)``), retry with deterministic
+    backoff through the PR-6 backend ladder, per-(matrix, rung) circuit
+    breakers, admission-control load shedding, and the unified SPT3xx
+    incident report (``service.report()``).  A production resilience
+    config usually passes ``sleep=time.sleep`` so backoff really waits;
+    the default config never sleeps (virtual-clock friendly).
     """
     from . import serve
 
@@ -422,7 +448,8 @@ def make_service(matrices=None, *, capacity: int = 32, disk_dir=None,
     cache = serve.ProgramCache(capacity=capacity, disk_dir=disk_dir, cfg=cfg)
     svc = serve.SolveService(cache, max_batch=max_batch,
                              max_delay=max_delay, clock=clock, timer=timer,
-                             backend=backend, mesh=mesh, **backend_opts)
+                             backend=backend, mesh=mesh,
+                             resilience=resilience, **backend_opts)
     for mid, m in (matrices or {}).items():
         svc.register(mid, m)
     return svc

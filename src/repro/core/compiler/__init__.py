@@ -35,6 +35,7 @@ from .sched import MAX_PSUM_SLOT, PSUM_OVERFLOW_SLOTS  # noqa: F401
 
 __all__ = [
     "compile_dag",
+    "recompile_values",
     "ComputeDag",
     "PartitionIR",
     "AssignIR",
@@ -126,3 +127,76 @@ def compile_dag(dag: ComputeDag, cfg: AccelConfig | None = None, *,
             PassStats("verify_ir", t_verify, {"stages_verified": verified}))
     prog.stats.compile_seconds = time.perf_counter() - t0
     return prog
+
+
+def recompile_values(prog: Program, new_workload) -> Program:
+    """Values-only recompilation: reuse the schedule, regather the stream.
+
+    Factorization loops re-solve one sparsity *pattern* with fresh numeric
+    values every step; the schedule (partition / cu-assign / psum-cache /
+    ICR / elide — everything but the value stream) depends only on the
+    pattern, so recompiling it is pure waste.  This fast path gathers a
+    fresh value stream through the program's provenance plane
+    (``prog.stream_src``, recorded by the schedule pass: entry >= 0 is a
+    global edge index into the workload's weight array, a negative entry
+    -(i+1) is node i's scale) and returns a *new* `Program` sharing every
+    other tensor with ``prog``.
+
+    ``new_workload`` is a `TriCSR` (lowered through the SpTRSV frontend —
+    a pure re-slicing, no scheduling) or any `ComputeDag`.  It must have
+    the same pattern as the program's source workload: same ``n``, same
+    edge count.  Callers that cannot guarantee pattern equality must key
+    on a structure fingerprint first (`serve.pattern_fingerprint`, as
+    `serve.ProgramCache` does).
+
+    Raises ``ValueError`` when ``prog`` carries no provenance plane (a
+    pre-provenance deserialized program — take the full recompile path)
+    or when the shapes disagree; the new workload's values are validated
+    (finite weights, finite non-zero scale) before gathering.
+
+    The returned program is a distinct object on purpose: executors fold
+    the stream into their traces as constants and cache per program
+    *identity*, so refreshing values in place would silently serve stale
+    numbers from cached traces.
+    """
+    import dataclasses
+
+    import numpy as np
+
+    from ..csr import TriCSR
+
+    if isinstance(new_workload, TriCSR):
+        from ..frontends.sptrsv import lower_tri
+
+        dag = lower_tri(new_workload)
+    else:
+        dag = new_workload
+    ss = prog.stream_src
+    if ss is None:
+        raise ValueError(
+            "program carries no value-provenance plane (stream_src) — "
+            "compiled before values-only recompilation existed; run a "
+            "full recompile instead")
+    if dag.n != prog.n:
+        raise ValueError(
+            f"values refresh for n={prog.n} program got a workload with "
+            f"n={dag.n}")
+    if ss.shape != prog.stream.shape:
+        raise ValueError(
+            f"provenance plane has {ss.size} entries but the stream has "
+            f"{prog.stream.size}")
+    dag.validate()
+    edge = ss >= 0
+    if (edge.any() and int(ss[edge].max()) >= dag.n_edges) or \
+            ((~edge).any() and int(-(ss[~edge].min() + 1)) >= dag.n):
+        raise ValueError(
+            f"provenance plane indexes outside the new workload "
+            f"({dag.n_edges} edges, {dag.n} nodes) — pattern mismatch")
+    new_stream = np.empty(ss.shape, dtype=np.float64)
+    new_stream[edge] = dag.weight[ss[edge]]
+    new_stream[~edge] = dag.scale[-(ss[~edge] + 1)]
+    return dataclasses.replace(
+        prog,
+        stream=new_stream.astype(np.float32),
+        stats=dataclasses.replace(prog.stats, name=dag.name),
+    )

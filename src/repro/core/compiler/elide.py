@@ -44,4 +44,5 @@ def run(sir: ScheduleIR) -> EmitIR:
         row_lo=row_lo, row_hi=row_hi,
         stream=sir.stream, num_slots=sir.num_slots,
         stats=stats, metrics=metrics,
+        stream_src=sir.stream_src,
     )

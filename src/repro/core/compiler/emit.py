@@ -33,4 +33,5 @@ def run(eir: EmitIR, cfg: AccelConfig, planes: int | None = None) -> Program:
         stats=eir.stats,
         row_lo=eir.row_lo,
         row_hi=eir.row_hi,
+        stream_src=eir.stream_src,
     )

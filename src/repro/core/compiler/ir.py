@@ -166,6 +166,11 @@ class ScheduleIR:
     stats: ScheduleStats
     metrics: dict              # psum-schedule pass metrics
     icr_metrics: dict          # ICR-reorder pass metrics
+    # value provenance, parallel to `stream`: entry >= 0 is a global edge
+    # index into the frontend ComputeDag's weight array, entry < 0 encodes
+    # node id -(i+1) whose scale was streamed — the map the values-only
+    # recompile path (`compiler.recompile_values`) regathers from
+    stream_src: np.ndarray | None = None  # int64 [S]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -191,6 +196,7 @@ class EmitIR:
     num_slots: int
     stats: ScheduleStats
     metrics: dict
+    stream_src: np.ndarray | None = None  # int64 [S] (see ScheduleIR)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -51,15 +51,19 @@ MAX_PSUM_SLOT = MAX_SLOT
 
 class _Node:
     __slots__ = (
-        "nid", "owner", "srcs", "val_of", "ready", "pending",
+        "nid", "owner", "srcs", "val_of", "gidx_of", "ready", "pending",
         "remaining", "started", "solved", "slot",
     )
 
-    def __init__(self, nid: int, owner: int, srcs, weights):
+    def __init__(self, nid: int, owner: int, srcs, weights, edge0: int = 0):
         self.nid = nid
         self.owner = owner
         self.srcs = srcs
         self.val_of = dict(zip(srcs.tolist(), weights.tolist()))
+        # source node id -> global edge index into ComputeDag.weight: the
+        # value-provenance map the stream_src plane (values-only
+        # recompilation, `compiler.recompile_values`) is built from
+        self.gidx_of = {s: edge0 + k for k, s in enumerate(srcs.tolist())}
         self.ready: list[int] = []
         self.pending = len(srcs)
         self.remaining = len(srcs)
@@ -141,7 +145,8 @@ def run(air: AssignIR, cfg: AccelConfig) -> ScheduleIR:
     nodes: list[_Node] = []
     for i in range(n):
         srcs, weights = dag.node(i)
-        nodes.append(_Node(i, int(owner[i]), srcs, weights))
+        nodes.append(_Node(i, int(owner[i]), srcs, weights,
+                           edge0=int(dag.ptr[i])))
 
     cus = [_CU(c, dag.name, task_lists[c], cfg.psum_words) for c in range(p)]
     startable: list[dict[int, int]] = [dict() for _ in range(p)]  # pos -> nid
@@ -152,6 +157,10 @@ def run(air: AssignIR, cfg: AccelConfig) -> ScheduleIR:
 
     ops_t, val_t, src_t, pct_t, psl_t = [], [], [], [], []
     stream: list[float] = []
+    # value provenance, parallel to `stream`: entry >= 0 is a global edge
+    # index into dag.weight, entry < 0 encodes node id -(i+1) whose scale
+    # was streamed (the values-only recompile path reads this plane)
+    stream_src: list[int] = []
     stats = ScheduleStats(name=dag.name, n=n, nnz=dag.nnz, cycles=0,
                           exec_edges=0, exec_finals=0)
 
@@ -324,12 +333,14 @@ def run(air: AssignIR, cfg: AccelConfig) -> ScheduleIR:
                 op_row[c] = OP_EDGE
                 val_row[c] = len(stream)
                 stream.append(float(nd.val_of[s]))
+                stream_src.append(nd.gidx_of[s])
                 src_row[c] = s
                 stats.exec_edges += 1
             else:
                 op_row[c] = OP_FINAL
                 val_row[c] = len(stream)
                 stream.append(float(scale[nd.nid]))
+                stream_src.append(-(nd.nid + 1))
                 src_row[c] = nd.nid  # FINAL writes x[src]: out_idx is derived
                 nd.solved = True
                 cu.done_count += 1
@@ -390,4 +401,5 @@ def run(air: AssignIR, cfg: AccelConfig) -> ScheduleIR:
         stream=np.array(stream, dtype=np.float64),
         num_slots=num_slots, stats=stats, metrics=metrics,
         icr_metrics=icr_metrics,
+        stream_src=np.array(stream_src, dtype=np.int64),
     )

@@ -38,6 +38,9 @@ __all__ = [
     "UnknownBackendError",
     "BackendOptionsError",
     "PlacementInfeasibleError",
+    "ServingError",
+    "DeadlineExceededError",
+    "LoadShedError",
 ]
 
 
@@ -100,3 +103,33 @@ class BackendOptionsError(BackendExecutionError, TypeError):
 
 class PlacementInfeasibleError(BackendExecutionError, ValueError):
     """The requested Pallas memory placement admits no valid window plan."""
+
+
+class ServingError(RobustnessError):
+    """Service-level failure of the resilient serving layer (DESIGN.md §10).
+
+    The solve stack below is healthy or degraded as its own taxonomy
+    describes; this family covers the *service* refusing or abandoning a
+    request — by policy, never silently.  ``detail`` carries the
+    machine-readable request context (matrix id, deadline, budgets).
+    """
+
+
+class DeadlineExceededError(ServingError):
+    """A request's deadline passed before its solve could complete.
+
+    Raised from `serve.SolveTicket.result` when the serving layer failed
+    the ticket fast (already expired at submit, or expired while pending)
+    instead of consuming a solve on an answer nobody is waiting for.
+    ``detail`` carries ``deadline`` / ``now`` on the service clock.
+    """
+
+
+class LoadShedError(ServingError):
+    """A request was shed by admission control (bounded pending budgets).
+
+    Raised from `serve.ShedTicket.result`: the per-matrix or global
+    pending-column budget was full, so the service refused the request
+    instead of growing its queues unboundedly.  ``detail`` names the
+    exhausted budget and its limit.
+    """

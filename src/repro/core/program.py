@@ -292,6 +292,14 @@ class Program:
     # that drive the level-boundary flush/refill DMAs.
     row_lo: np.ndarray | None = None  # [T] int32
     row_hi: np.ndarray | None = None  # [T] int32
+    # Value provenance of `stream` (values-only recompilation, DESIGN.md
+    # §10): stream_src[s] >= 0 is the global edge index into the frontend
+    # ComputeDag's weight array whose coefficient was streamed at slot s;
+    # a negative entry -(i+1) means node i's scale (diagonal reciprocal)
+    # was streamed.  `compiler.recompile_values` regathers a fresh stream
+    # from this plane without rescheduling; None on pre-provenance
+    # programs (they take the full recompile path).
+    stream_src: np.ndarray | None = None  # [S] int64
 
     @property
     def cycles(self) -> int:

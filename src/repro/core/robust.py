@@ -36,7 +36,9 @@ Three layers over the existing compile/execute stack (DESIGN.md §7):
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
+import zlib
 
 import numpy as np
 
@@ -67,11 +69,13 @@ __all__ = [
     "FaultInjector",
     "run_fault_injection",
     "run_ir_fault_injection",
+    "run_service_fault_injection",
     "csr_matvec",
     "relative_residual",
     "LADDER",
     "FAULT_CLASSES",
     "IR_FAULT_CLASSES",
+    "SERVICE_FAULT_CLASSES",
 ]
 
 # The deterministic degradation order.  A requested backend enters the
@@ -746,4 +750,207 @@ def run_ir_fault_injection(mat: TriCSR, cfg: AccelConfig | None = None, *,
             "fired_codes": fired,
             "caught": expected in fired,
         })
+    return results
+
+
+# ---------------------------------------------------------------------------
+# service-level chaos harness (the resilient serving acceptance bar)
+# ---------------------------------------------------------------------------
+SERVICE_FAULT_CLASSES = (
+    "backend_exception",   # entry rung raises; retry/backoff then degrade
+    "backend_hang",        # entry rung stalls past flush_timeout_s
+    "backend_nonfinite",   # entry rung returns NaN; health check degrades
+    "disk_corrupt",        # program-cache disk blob corrupted between gets
+    "rhs_poison",          # non-finite b: every rung unhealthy, typed fail
+    "overload_burst",      # admission budgets exceeded: typed load sheds
+    "expired_deadline",    # requests expire before / while queued
+)
+
+
+def run_service_fault_injection(mats=None, *, seed: int = 0,
+                                requests: int = 24,
+                                classes: tuple[str, ...] = SERVICE_FAULT_CLASSES,
+                                residual_tol: float = 1e-3) -> list[dict]:
+    """Drive a resilient `serve.SolveService` through fault schedules.
+
+    For each fault class a fresh two-tenant service (numpy entry rung,
+    `serve.ManualClock`, full resilience config) takes ``requests``
+    submits while the class's faults fire through an injected
+    stage-solver wrapper (exceptions / hangs / non-finite outputs on the
+    entry rung), corrupted disk blobs, poisoned right-hand sides,
+    overload bursts, or expiring deadlines — all seeded, all on virtual
+    time.  Returns one dict per class::
+
+        fault, tickets, completed, failed_typed, shed,
+        silent_wrong, deadlocked, incidents
+
+    where ``completed`` tickets were checked against the bit-exact
+    stage-matched oracle (`executor.execute_numpy` for the entry rung,
+    `csr.serial_solve` for the reference rung; residual fallback when a
+    wide ticket mixed rungs), failed tickets must raise a typed
+    `errors.RobustnessError`, and ``deadlocked`` is True if drain left
+    pending columns behind.  The acceptance bar is zero ``silent_wrong``
+    and zero ``deadlocked`` across every class and seed
+    (`tests/test_resilience.py`, `benchmarks/serve_chaos.py --smoke`).
+    """
+    from .matrices import banded
+    from .resilience import AdmissionConfig, BreakerConfig, ResilienceConfig, RetryPolicy
+    from .schedule import compile_program
+    from .serve import ManualClock, ProgramCache, SolveService
+
+    if mats is None:
+        mats = {"a": banded(96, 6, 0.5, seed=3, name="chaos-a"),
+                "b": banded(80, 4, 0.6, seed=4, name="chaos-b")}
+    mids = sorted(mats)
+    oracle_progs = {mid: compile_program(m) for mid, m in mats.items()}
+
+    def oracle_for(mid, b, stages):
+        mat = mats[mid]
+        bm = np.asarray(b, dtype=np.float64)
+        bm2 = bm[:, None] if bm.ndim == 1 else bm
+        if stages == {"reference"}:
+            x = np.stack([serial_solve(mat, bm2[:, j])
+                          for j in range(bm2.shape[1])], axis=1)
+            return x[:, 0] if bm.ndim == 1 else x
+        if stages == {"numpy"}:
+            return np.asarray(execute_numpy(oracle_progs[mid], b))
+        return None  # mixed rungs: residual check instead
+
+    results = []
+    for fault in classes:
+        rng = np.random.default_rng(
+            (seed * 1009 + zlib.crc32(fault.encode())) % 2 ** 31)
+        clock = ManualClock()
+        flush_timeout = 0.25
+        res = ResilienceConfig(
+            retry=RetryPolicy(max_retries=1, base_delay_s=0.01, seed=seed),
+            breaker=BreakerConfig(window_s=50.0, min_samples=4,
+                                  failure_threshold=0.75, cooldown_s=5.0),
+            admission=AdmissionConfig(
+                max_pending_per_matrix=6 if fault == "overload_burst"
+                else None,
+                max_pending_total=10 if fault == "overload_burst" else None),
+            flush_timeout_s=flush_timeout)
+        tmp = None
+        cache_kw = {}
+        if fault == "disk_corrupt":
+            import tempfile
+
+            tmp = tempfile.TemporaryDirectory()
+            # capacity 1 with two tenants: every other get goes to disk
+            cache_kw = {"capacity": 1, "disk_dir": tmp.name}
+        svc = SolveService(ProgramCache(**cache_kw), max_batch=4,
+                           max_delay=0.5, clock=clock, backend="numpy",
+                           resilience=res)
+        for mid, m in mats.items():
+            svc.register(mid, m)
+
+        # wrap the stage-solver factory with the fault plan: solver-level
+        # faults fire on the entry rung only, so the reference rung keeps
+        # the always-answers guarantee testable
+        inj = FaultInjector(seed + 17)
+        orig_stage_solver = svc._stage_solver
+        solver_fault = {"backend_exception": "exception",
+                        "backend_hang": "hang",
+                        "backend_nonfinite": "nonfinite"}.get(fault)
+
+        def chaotic(stage, prog, k, mat,
+                    _orig=orig_stage_solver, _fault=solver_fault):
+            fn = _orig(stage, prog, k, mat)
+            if _fault is None or stage != "numpy":
+                return fn
+
+            def wrapped(bmat):
+                if rng.random() < 0.5:
+                    if _fault == "exception":
+                        raise RuntimeError("injected backend fault")
+                    if _fault == "hang":
+                        clock.advance(flush_timeout * 2)
+                        return fn(bmat)
+                    x = np.asarray(fn(bmat)).copy()
+                    x.reshape(-1)[int(rng.integers(x.size))] = np.nan
+                    return x
+                return fn(bmat)
+            return wrapped
+
+        svc._stage_solver = chaotic
+
+        tickets = []
+        for i in range(requests):
+            mid = mids[int(rng.integers(len(mids)))]
+            n = mats[mid].n
+            # overload bursts need wide requests so the pending budgets
+            # actually bind (narrow ones flush full before they pile up)
+            k = int(rng.integers(1, 9 if fault == "overload_burst" else 4))
+            b = rng.standard_normal((n, k)) if k > 1 \
+                else rng.standard_normal(n)
+            kw = {}
+            if fault == "rhs_poison" and rng.random() < 0.4:
+                b = inj.poison_rhs(b, k=1)
+            if fault == "expired_deadline":
+                # half the stream: deadlines that expire in the queue or
+                # already lie in the past
+                r = rng.random()
+                if r < 0.25:
+                    kw["timeout"] = -0.1          # expired before submit
+                elif r < 0.5:
+                    kw["timeout"] = 0.05          # expires while queued
+            ticket = svc.submit(mid, b, **kw)
+            tickets.append((ticket, b))
+            if fault == "disk_corrupt" and i % 5 == 2 and tmp is not None:
+                # corrupt every .prog blob currently on disk
+                import glob as _glob
+
+                for path in _glob.glob(os.path.join(tmp.name, "*.prog")):
+                    with open(path, "rb") as f:
+                        blob = f.read()
+                    with open(path, "wb") as f:
+                        f.write(inj.corrupt_blob(blob, k=3))
+            clock.advance(float(rng.uniform(0.0, 0.3)))
+            svc.pump()
+        clock.advance(1.0)
+        svc.pump()
+        svc.drain()
+
+        flush_by_index = {r.index: r for r in svc.stats.flushes
+                          if r.index >= 0}
+        completed = failed_typed = shed = 0
+        silent_wrong = False
+        for ticket, b in tickets:
+            if not ticket.done:
+                silent_wrong = True  # a lost ticket is as bad as a wrong one
+                continue
+            if ticket.shed:
+                shed += 1
+                continue
+            if ticket.failed:
+                failed_typed += isinstance(ticket.error, RobustnessError)
+                silent_wrong |= not isinstance(ticket.error, RobustnessError)
+                continue
+            completed += 1
+            x = ticket.result()
+            stages = {flush_by_index[i].stage
+                      for i in ticket.flush_indices if i in flush_by_index}
+            want = oracle_for(ticket.matrix_id, b, stages)
+            if want is not None:
+                ok = np.array_equal(np.asarray(x, dtype=np.float64),
+                                    np.asarray(want, dtype=np.float64))
+            else:
+                ok = relative_residual(mats[ticket.matrix_id], x, b) \
+                    <= residual_tol
+            silent_wrong |= not ok
+        deadlocked = svc.pending_columns() > 0 or \
+            any(not t.done for t, _ in tickets)
+        results.append({
+            "fault": fault,
+            "tickets": len(tickets),
+            "completed": completed,
+            "failed_typed": failed_typed,
+            "shed": shed,
+            "silent_wrong": bool(silent_wrong),
+            "deadlocked": bool(deadlocked),
+            "incidents": len(svc.incidents),
+        })
+        if tmp is not None:
+            tmp.cleanup()
     return results

@@ -18,13 +18,18 @@ compiler.
 
 from __future__ import annotations
 
-from .compiler import PSUM_OVERFLOW_SLOTS, compile_dag  # noqa: F401
+from .compiler import (  # noqa: F401  (recompile_values re-exported)
+    PSUM_OVERFLOW_SLOTS,
+    compile_dag,
+    recompile_values,
+)
 from .compiler.assign import allocate
 from .csr import TriCSR
 from .frontends.sptrsv import lower_tri
 from .program import AccelConfig, Program
 
-__all__ = ["compile_program", "allocate_nodes", "PSUM_OVERFLOW_SLOTS"]
+__all__ = ["compile_program", "recompile_values", "allocate_nodes",
+           "PSUM_OVERFLOW_SLOTS"]
 
 
 def allocate_nodes(mat: TriCSR, cfg: AccelConfig) -> list[list[int]]:

@@ -59,6 +59,7 @@ _ARRAYS = (
     ("stream", True),
     ("row_lo", False),
     ("row_hi", False),
+    ("stream_src", False),  # value provenance (values-only recompile path)
 )
 _STATS_ARRAYS = (("per_cu_edges", False),)
 # ScheduleStats fields that do NOT round-trip as JSON scalars
@@ -189,6 +190,7 @@ def loads_program(data: bytes, *, verify: bool = True) -> Program:
             num_slots=header["num_slots"],
             row_lo=arrays.get("row_lo"),
             row_hi=arrays.get("row_hi"),
+            stream_src=arrays.get("stream_src"),
         )
     except (KeyError, TypeError) as e:
         raise _corrupt(f"header schema mismatch ({e})") from e

@@ -46,6 +46,27 @@ one, and each column routes back to exactly the ticket that submitted
 it.  Batched columns are bit-identical to per-request solves (no
 cross-column arithmetic exists in any executor), which the property
 suite (`tests/test_serve_property.py`) pins down.
+
+Resilient serving (DESIGN.md §10, ``resilience=`` on the service): each
+request may carry a deadline — a bucket flushes *early* when waiting the
+full ``max_delay`` would miss its tightest deadline, and an
+already-expired ticket fails fast with a typed
+`errors.DeadlineExceededError` instead of consuming solve width.  Each
+flush solves through the PR-6 backend ladder (`robust.LADDER` from the
+service's entry rung down to the CSR "reference" solve) with bounded
+retry + deterministic-jitter backoff (`resilience.RetryPolicy`) per
+rung, a per-(matrix, rung) circuit breaker (`resilience.BreakerBoard`)
+gating rungs that keep failing, a per-attempt hang bound
+(``flush_timeout_s``), and a non-finite output check — a flush either
+delivers healthy numbers or fails its tickets with a typed error carrying
+the incident trail, never silently wrong answers.  Admission control
+(`resilience.AdmissionConfig`) bounds pending columns per matrix and
+globally; an over-budget ``submit`` returns a typed `ShedTicket`.  Every
+degradation event lands in ONE bounded `resilience.IncidentLog` shared
+with the program cache's disk tier, rendered by ``report()`` through the
+stable SPT3xx diagnostic codes.  All of it runs on the injectable clock —
+the chaos harness (`robust.run_service_fault_injection`) replays fault
+schedules deterministically.
 """
 
 from __future__ import annotations
@@ -58,30 +79,41 @@ from collections import OrderedDict
 
 import numpy as np
 
-from .csr import TriCSR
-from .errors import ProgramCorruptionError
+from .csr import TriCSR, serial_solve
+from .errors import (
+    BackendExecutionError,
+    DeadlineExceededError,
+    LoadShedError,
+    ProgramCorruptionError,
+)
 from .executor import execute_numpy, pad_batch, validate_backend
 from .program import AccelConfig, Program
-from .robust import Incident
-from .schedule import compile_program
+from .resilience import BreakerBoard, IncidentLog, ResilienceConfig
+from .robust import LADDER, _ENTRY, Incident
+from .schedule import compile_program, recompile_values
 
 __all__ = [
     "FLUSH_DEADLINE",
     "FLUSH_DRAIN",
     "FLUSH_FULL",
+    "FLUSH_SHED",
     "CacheEntryStats",
     "FlushRecord",
     "ManualClock",
     "ProgramCache",
     "ServeStats",
+    "ShedTicket",
     "SolveService",
     "SolveTicket",
     "pattern_fingerprint",
 ]
 
 FLUSH_FULL = "full"          # bucket reached max_batch columns
-FLUSH_DEADLINE = "deadline"  # oldest pending column aged past max_delay
+FLUSH_DEADLINE = "deadline"  # oldest pending column aged past max_delay,
+                             # or a request deadline forced an early flush
 FLUSH_DRAIN = "drain"        # explicit drain() regardless of deadline
+FLUSH_SHED = "shed"          # admission control rejected a submit (the
+                             # record consumes no flush index: index=-1)
 
 _FP_TAG = b"sptrsv-pattern-v1"
 
@@ -116,6 +148,8 @@ class CacheEntryStats:
     hits: int = 0            # served from the in-memory LRU
     disk_hits: int = 0       # rehydrated from the disk tier (no compile)
     compiles: int = 0        # compiler runs (cold miss or corrupt blob)
+    value_refreshes: int = 0  # same-pattern/new-values misses served by
+                              # `recompile_values` (schedule reused)
     disk_corrupt: int = 0    # disk blobs rejected by CRC/structural verify
     compile_seconds: float = 0.0
 
@@ -140,7 +174,8 @@ class ProgramCache:
     """
 
     def __init__(self, capacity: int = 32, disk_dir=None,
-                 cfg: AccelConfig | None = None, compile_fn=None):
+                 cfg: AccelConfig | None = None, compile_fn=None,
+                 incident_cap: int = 1024):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = int(capacity)
@@ -149,10 +184,15 @@ class ProgramCache:
         self._compile = compile_fn or (lambda m: compile_program(m, cfg))
         self._mem: "OrderedDict[str, tuple[Program, int]]" = OrderedDict()
         self.entries: dict[str, CacheEntryStats] = {}
-        self.incidents: list[Incident] = []
+        # ONE bounded incident log for the whole serving layer: the
+        # service that wraps this cache shares the same object, so disk
+        # corruption, retries, breaker flips and sheds interleave in one
+        # capped record instead of fragmenting across components.
+        self.incidents = IncidentLog(incident_cap)
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.value_refreshes = 0
 
     # ------------------------------------------------------------------
     def __len__(self) -> int:
@@ -182,6 +222,7 @@ class ProgramCache:
         vcrc = _values_crc(mat)
         ent = self._entry(fp, mat.name)
         cached = self._mem.get(fp)
+        stale: Program | None = None
         if cached is not None:
             prog, crc = cached
             if crc == vcrc:
@@ -189,18 +230,39 @@ class ProgramCache:
                 ent.hits += 1
                 self.hits += 1
                 return prog
-            # same pattern, new numeric values: the schedule would be
-            # reusable (ROADMAP: recompile_values) but today the whole
-            # program re-emits; the stale entry is replaced below.
+            # same pattern, new numeric values: a guarded miss, but the
+            # schedule depends only on the pattern — when the program
+            # carries its value-provenance plane the stream is regathered
+            # through `recompile_values` instead of re-running the
+            # pipeline (the factorization-loop fast path).
+            stale = prog
             del self._mem[fp]
         self.misses += 1
-        prog = self._rehydrate(fp, vcrc, ent)
+        prog = self._refresh(stale, mat, fp, vcrc, ent)
+        if prog is None:
+            prog = self._rehydrate(fp, vcrc, ent)
         if prog is None:
             prog = self._compile(mat)
             ent.compiles += 1
             ent.compile_seconds += float(prog.stats.compile_seconds or 0.0)
             self._write_through(fp, vcrc, prog)
         self._insert(fp, vcrc, prog)
+        return prog
+
+    def _refresh(self, stale: Program | None, mat: TriCSR, fp: str,
+                 vcrc: int, ent: CacheEntryStats) -> Program | None:
+        """Values-only refresh of a same-pattern stale entry, when its
+        provenance plane allows; the refreshed program gets its own disk
+        blob (the disk tier is keyed by values CRC too)."""
+        if stale is None or stale.stream_src is None:
+            return None
+        try:
+            prog = recompile_values(stale, mat)
+        except ValueError:
+            return None  # defensive: fingerprint collision / stale plane
+        ent.value_refreshes += 1
+        self.value_refreshes += 1
+        self._write_through(fp, vcrc, prog)
         return prog
 
     def _rehydrate(self, fp: str, vcrc: int,
@@ -245,7 +307,9 @@ class ProgramCache:
             "hits": self.hits, "misses": self.misses,
             "evictions": self.evictions, "resident": len(self._mem),
             "capacity": self.capacity,
+            "value_refreshes": self.value_refreshes,
             "incidents": len(self.incidents),
+            "incidents_dropped": self.incidents.dropped,
             "entries": {fp: e.to_dict() for fp, e in self.entries.items()},
         }
 
@@ -274,19 +338,30 @@ class SolveTicket:
     wide request can span several flushes).  ``result()`` returns ``[n]``
     for a 1-D submit and ``[n, k]`` for a 2-D one; calling it before the
     ticket is done raises (pump or drain the service first).
+
+    A ticket can also complete by *failing*: an expired request deadline
+    or an exhausted backend ladder marks the whole ticket failed
+    (``failed``, with the typed `errors.RobustnessError` in ``error``)
+    and ``result()`` re-raises it — a wide ticket fails whole, partial
+    column sets are never returned.  ``deadline`` (optional, on the
+    service clock) is the latest time delivery still counts.
     """
 
+    shed = False  # `ShedTicket` overrides; uniform check for callers
+
     def __init__(self, matrix_id: str, n: int, k: int, single: bool,
-                 submitted_at: float):
+                 submitted_at: float, deadline: float | None = None):
         self.matrix_id = matrix_id
         self.columns = k
         self.submitted_at = submitted_at
+        self.deadline = deadline
         self.completed_at: float | None = None
         self.flush_indices: list[int] = []
         self._single = single
         self._x: np.ndarray | None = None
         self._n = n
         self._remaining = k
+        self._error: Exception | None = None
         if k == 0:  # degenerate [n, 0] request: nothing to solve
             self._x = np.zeros((n, 0), dtype=np.float32)
             self.completed_at = submitted_at
@@ -295,8 +370,18 @@ class SolveTicket:
     def done(self) -> bool:
         return self._remaining == 0
 
+    @property
+    def failed(self) -> bool:
+        return self._error is not None
+
+    @property
+    def error(self) -> Exception | None:
+        return self._error
+
     def _deliver(self, j: int, col: np.ndarray, flush_index: int,
                  at: float) -> None:
+        if self._error is not None:
+            return  # ticket already failed whole; drop the late column
         if self._x is None:
             self._x = np.empty((self._n, self.columns), dtype=col.dtype)
         self._x[:, j] = col
@@ -306,13 +391,42 @@ class SolveTicket:
         if self._remaining == 0:
             self.completed_at = at
 
+    def _fail(self, exc: Exception, at: float) -> None:
+        if self.done:
+            return
+        self._error = exc
+        self._remaining = 0
+        self.completed_at = at
+
     def result(self) -> np.ndarray:
         if not self.done:
             raise RuntimeError(
                 f"ticket for {self.matrix_id!r} not complete "
                 f"({self._remaining}/{self.columns} columns pending) — "
                 f"pump() or drain() the service")
+        if self._error is not None:
+            raise self._error
         return self._x[:, 0] if self._single else self._x
+
+
+class ShedTicket(SolveTicket):
+    """Typed admission-control rejection; quacks like a completed ticket.
+
+    Returned by ``submit`` when the request's columns would exceed a
+    pending budget (`resilience.AdmissionConfig`).  ``done`` is True
+    immediately, ``shed`` marks the rejection, and ``result()`` raises
+    the `errors.LoadShedError` carrying the violated budget in
+    ``.detail`` — callers retry later or route elsewhere.
+    """
+
+    shed = True
+
+    def __init__(self, matrix_id: str, n: int, k: int, single: bool,
+                 at: float, error: LoadShedError):
+        super().__init__(matrix_id, n, k, single, at)
+        self._error = error
+        self._remaining = 0
+        self.completed_at = at
 
 
 @dataclasses.dataclass
@@ -320,13 +434,15 @@ class FlushRecord:
     """One executed micro-batch (the unit `benchmarks/serve_load.py`
     replays for its queueing model)."""
 
-    index: int
+    index: int         # -1 for FLUSH_SHED records (no solver ran)
     matrix_id: str
-    reason: str        # FLUSH_FULL | FLUSH_DEADLINE | FLUSH_DRAIN
-    columns: int       # real RHS columns solved
+    reason: str        # FLUSH_FULL | FLUSH_DEADLINE | FLUSH_DRAIN | FLUSH_SHED
+    columns: int       # real RHS columns solved (or shed)
     padded: int        # executor batch width (pad_batch of columns)
     at: float          # injectable-clock time the flush ran
     service_s: float   # measured solve wall time (0.0 without a timer)
+    stage: str = ""    # ladder rung that answered ("" on the legacy path
+                       # and on failed/shed records)
 
 
 @dataclasses.dataclass
@@ -341,10 +457,18 @@ class ServeStats:
     flushes_full: int = 0
     flushes_deadline: int = 0
     flushes_drain: int = 0
+    # resilience accounting (DESIGN.md §10); all zero on the legacy path
+    requests_shed: int = 0          # submits rejected by admission control
+    columns_shed: int = 0
+    deadline_failed_columns: int = 0  # columns failed fast, deadline expired
+    retries: int = 0                # backend attempts retried with backoff
+    degraded_flushes: int = 0       # flushes answered below the entry rung
+    failed_flushes: int = 0         # flushes that exhausted the ladder
     flushes: list = dataclasses.field(default_factory=list)
     cache: dict = dataclasses.field(default_factory=dict)
 
     def flush_count(self) -> int:
+        """Solver flushes (shed records carry index=-1 and do not count)."""
         return self.flushes_full + self.flushes_deadline + self.flushes_drain
 
     def to_dict(self) -> dict:
@@ -372,6 +496,7 @@ class SolveService:
     def __init__(self, cache: ProgramCache | None = None, *,
                  max_batch: int = 16, max_delay: float = 1e-3,
                  clock=None, timer=None, backend: str = "jax", mesh=None,
+                 resilience: ResilienceConfig | None = None,
                  **backend_opts):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -396,6 +521,17 @@ class SolveService:
         self._pending: dict[str, list] = {}
         self._seq = 0
         self.stats = ServeStats()
+        # one shared, bounded incident log for cache + service events
+        self.incidents = self.cache.incidents
+        self.resilience = resilience
+        self._breakers: BreakerBoard | None = None
+        if resilience is not None:
+            self.incidents.set_cap(resilience.incident_cap)
+            self._breakers = BreakerBoard(resilience.breaker,
+                                          sink=self.incidents)
+            # degradation order from the service's entry rung down to the
+            # CSR reference solve (always available: tenants are retained)
+            self._ladder = LADDER[_ENTRY[backend]:]
 
     # ------------------------------------------------------------------
     def register(self, matrix_id: str, mat: TriCSR) -> str:
@@ -419,13 +555,24 @@ class SolveService:
 
     # ------------------------------------------------------------------
     def submit(self, matrix_id: str, b: np.ndarray, *,
-               now: float | None = None) -> SolveTicket:
+               now: float | None = None, deadline: float | None = None,
+               timeout: float | None = None) -> SolveTicket:
         """Enqueue a right-hand side; returns its `SolveTicket`.
 
-        Order of effects: (1) pump every bucket whose deadline is already
-        due — deadline flushes happen-before the new arrival; (2) enqueue
-        the request's columns; (3) flush full ``max_batch`` chunks of
-        this bucket immediately (a wide request can trigger several)."""
+        ``deadline`` (absolute, on the service clock) or ``timeout``
+        (relative to now; at most one of the two) bounds the request:
+        its bucket flushes early rather than miss it, and an
+        already-expired request fails fast with a typed
+        `errors.DeadlineExceededError` instead of consuming a solve.
+        Under admission control (``resilience=``), a request whose
+        columns would exceed a pending budget returns a `ShedTicket`
+        without enqueueing anything.
+
+        Order of effects: (1) pump every bucket that is already due —
+        those flushes happen-before the new arrival (and free budget);
+        (2) fail-fast / admission checks; (3) enqueue the request's
+        columns; (4) flush full ``max_batch`` chunks of this bucket
+        immediately (a wide request can trigger several)."""
         mat = self._mats.get(matrix_id)
         if mat is None:
             raise KeyError(f"unknown matrix_id {matrix_id!r} "
@@ -438,13 +585,34 @@ class SolveService:
                 f"expected b of shape ({mat.n},) or ({mat.n}, k) for "
                 f"{matrix_id!r}, got {b.shape}")
         t = self._clock() if now is None else float(now)
+        if deadline is not None and timeout is not None:
+            raise ValueError("pass deadline= or timeout=, not both")
+        if timeout is not None:
+            deadline = t + float(timeout)
         self.pump(now=t)
         k = bmat.shape[1]
-        ticket = SolveTicket(matrix_id, mat.n, k, single, t)
         self.stats.requests += 1
         self.stats.columns += k
         if k == 0:
+            return SolveTicket(matrix_id, mat.n, 0, single, t, deadline)
+        if deadline is not None and deadline < t:
+            # already expired: fail fast, consume nothing
+            ticket = SolveTicket(matrix_id, mat.n, k, single, t, deadline)
+            err = DeadlineExceededError(
+                f"request for {matrix_id!r} expired before submit "
+                f"(deadline {deadline:.6f} < now {t:.6f})",
+                detail={"matrix_id": matrix_id, "deadline": float(deadline),
+                        "now": t, "columns": k})
+            ticket._fail(err, t)
+            self.stats.deadline_failed_columns += k
+            self.incidents.append(Incident(
+                stage="serve", kind="deadline-expired", message=str(err),
+                error=type(err).__name__, detail=dict(err.detail)))
             return ticket
+        shed = self._admit(matrix_id, k, single, mat.n, t)
+        if shed is not None:
+            return shed
+        ticket = SolveTicket(matrix_id, mat.n, k, single, t, deadline)
         bucket = self._pending.setdefault(matrix_id, [])
         for j in range(k):
             bucket.append((self._seq, t, ticket, j, bmat[:, j]))
@@ -454,17 +622,66 @@ class SolveService:
             self._flush(matrix_id, t, FLUSH_FULL, count=self.max_batch)
         return ticket
 
+    def _admit(self, matrix_id: str, k: int, single: bool, n: int,
+               t: float) -> ShedTicket | None:
+        """Admission check; a `ShedTicket` when a budget would overflow."""
+        if self.resilience is None:
+            return None
+        adm = self.resilience.admission
+        over = None
+        per = adm.max_pending_per_matrix
+        if per is not None and \
+                len(self._pending.get(matrix_id, ())) + k > per:
+            over = ("max_pending_per_matrix", per,
+                    len(self._pending.get(matrix_id, ())))
+        tot = adm.max_pending_total
+        if over is None and tot is not None and \
+                self.pending_columns() + k > tot:
+            over = ("max_pending_total", tot, self.pending_columns())
+        if over is None:
+            return None
+        budget, limit, pending = over
+        err = LoadShedError(
+            f"request for {matrix_id!r} shed: {k} column(s) would "
+            f"exceed {budget}={limit} ({pending} pending)",
+            detail={"matrix_id": matrix_id, "budget": budget,
+                    "limit": int(limit), "pending": int(pending),
+                    "columns": k})
+        st = self.stats
+        st.requests_shed += 1
+        st.columns_shed += k
+        st.flushes.append(FlushRecord(
+            index=-1, matrix_id=matrix_id, reason=FLUSH_SHED, columns=k,
+            padded=0, at=t, service_s=0.0))
+        self.incidents.append(Incident(
+            stage="serve", kind="shed", message=str(err),
+            error=type(err).__name__, detail=dict(err.detail)))
+        return ShedTicket(matrix_id, n, k, single, t, err)
+
+    def _due_time(self, bucket: list) -> float:
+        """When this bucket must flush: oldest arrival + ``max_delay``,
+        tightened by the tightest request deadline among its columns (a
+        bucket flushes early rather than miss a deadline it could meet)."""
+        due = bucket[0][1] + self.max_delay
+        for (_, _, ticket, _, _) in bucket:
+            d = ticket.deadline
+            if d is not None and d < due:
+                due = d
+        return due
+
     def pump(self, now: float | None = None) -> int:
-        """Flush every bucket whose deadline has expired at ``now``
-        (default: the injected clock).  Buckets flush in deterministic
-        (deadline, arrival-order) order; returns the number of flushes."""
+        """Flush every bucket that is due at ``now`` (default: the
+        injected clock) — its oldest column aged past ``max_delay``, or
+        a request deadline would otherwise be missed.  Buckets flush in
+        deterministic (due-time, arrival-order) order; returns the
+        number of flushes."""
         t = self._clock() if now is None else float(now)
         n_flushed = 0
         while True:
-            due = [(arr + self.max_delay, bucket[0][0], mid)
+            due = [(due_t, bucket[0][0], mid)
                    for mid, bucket in self._pending.items()
-                   for arr in (bucket[0][1],)
-                   if arr + self.max_delay <= t]
+                   for due_t in (self._due_time(bucket),)
+                   if due_t <= t]
             if not due:
                 return n_flushed
             _, _, mid = min(due)
@@ -502,14 +719,26 @@ class SolveService:
             self._pending[matrix_id] = rest
         else:
             del self._pending[matrix_id]
+        take = self._expire(take, matrix_id, now)
         k = len(take)
+        if k == 0:
+            self.stats.cache = self.cache.stats_dict()
+            return
         prog = self.cache.get(self._mats[matrix_id])
         bmat = np.stack([col for (_, _, _, _, col) in take], axis=1)
-        solve = self._solver(prog, k)
-        t0 = self._timer() if self._timer is not None else 0.0
-        x = np.asarray(solve(bmat))
-        dt = (self._timer() - t0) if self._timer is not None else 0.0
         st = self.stats
+        t0 = self._timer() if self._timer is not None else 0.0
+        err: Exception | None = None
+        stage = ""
+        if self.resilience is None:
+            solve = self._solver(prog, k)
+            x = np.asarray(solve(bmat))
+        else:
+            try:
+                x, stage = self._resilient_solve(matrix_id, prog, bmat, k)
+            except BackendExecutionError as e:
+                err, x = e, None
+        dt = (self._timer() - t0) if self._timer is not None else 0.0
         index = st.flush_count()
         if reason == FLUSH_FULL:
             st.flushes_full += 1
@@ -518,12 +747,201 @@ class SolveService:
         else:
             st.flushes_drain += 1
         st.solver_calls += 1
-        st.completed_columns += k
-        if k > 1:
-            st.batched_columns += k
         st.flushes.append(FlushRecord(
             index=index, matrix_id=matrix_id, reason=reason, columns=k,
-            padded=pad_batch(k), at=now, service_s=dt))
-        for i, (_, _, ticket, j, _) in enumerate(take):
-            ticket._deliver(j, x[:, i], index, now)
+            padded=pad_batch(k), at=now, service_s=dt, stage=stage))
+        if err is not None:
+            st.failed_flushes += 1
+            for (_, _, ticket, _, _) in take:
+                ticket._fail(err, now)
+        else:
+            st.completed_columns += k
+            if k > 1:
+                st.batched_columns += k
+            if self.resilience is not None and stage != self._ladder[0]:
+                st.degraded_flushes += 1
+            for i, (_, _, ticket, j, _) in enumerate(take):
+                ticket._deliver(j, x[:, i], index, now)
         st.cache = self.cache.stats_dict()
+
+    def _expire(self, take: list, matrix_id: str, now: float) -> list:
+        """Fail expired entries fast (typed, no solve consumed) and drop
+        columns of tickets that already failed; returns the live rest."""
+        live = []
+        for entry in take:
+            ticket = entry[2]
+            if ticket.failed:
+                continue  # failed whole earlier (deadline / prior flush)
+            d = ticket.deadline
+            if d is not None and d < now:
+                err = DeadlineExceededError(
+                    f"request for {matrix_id!r} missed its deadline "
+                    f"(deadline {d:.6f} < now {now:.6f})",
+                    detail={"matrix_id": matrix_id, "deadline": float(d),
+                            "now": float(now),
+                            "columns": ticket.columns})
+                ticket._fail(err, now)
+                self.stats.deadline_failed_columns += ticket.columns
+                self.incidents.append(Incident(
+                    stage="serve", kind="deadline-expired",
+                    message=str(err), error=type(err).__name__,
+                    detail=dict(err.detail)))
+                continue
+            live.append(entry)
+        return live
+
+    # -- resilient solve path (DESIGN.md §10) --------------------------
+    def _stage_solver(self, stage: str, prog: Program, k: int,
+                      mat: TriCSR):
+        """Build the solve closure of one ladder rung (executor caches
+        make repeated construction cheap — keyed on program identity)."""
+        if stage == "numpy":
+            return lambda bmat: execute_numpy(prog, bmat)
+        if stage == "reference":
+            def fn(bmat):
+                bm = np.asarray(bmat, dtype=np.float64)
+                return np.stack([serial_solve(mat, bm[:, j])
+                                 for j in range(bm.shape[1])], axis=1)
+            return fn
+        from .api import make_solver
+
+        if stage == "jax":
+            return make_solver(prog, batch=k, backend="jax")
+        placement = ("blocked" if stage == "pallas-blocked" else "resident")
+        opts = {kk: v for kk, v in self.backend_opts.items()
+                if kk != "placement"}
+        return make_solver(prog, batch=k, mesh=self.mesh, backend="pallas",
+                           placement=placement, **opts)
+
+    def _resilient_solve(self, matrix_id: str, prog: Program,
+                         bmat: np.ndarray, k: int):
+        """One flush through the backend ladder under the resilience
+        policy; returns ``(x, stage)`` or raises `BackendExecutionError`
+        with the flush's incident trail in ``.detail["incidents"]``.
+
+        Per rung: breaker gate (open rungs are skipped; if *every* rung
+        is gated the terminal rung runs anyway — the service always
+        answers), bounded retry with deterministic backoff on
+        exceptions, a hang bound (``flush_timeout_s``) and a non-finite
+        output check — health failures are deterministic, so they
+        degrade immediately instead of retrying.
+        """
+        res = self.resilience
+        mat = self._mats[matrix_id]
+        trail: list[Incident] = []
+
+        def record(stage, kind, message, *, error="", attempt=1,
+                   elapsed_s=0.0, detail=None):
+            inc = Incident(stage=stage, kind=kind, message=message,
+                           error=error, attempt=attempt,
+                           elapsed_s=float(elapsed_s),
+                           detail={"matrix_id": matrix_id,
+                                   **(detail or {})})
+            trail.append(inc)
+            self.incidents.append(inc)
+
+        t_gate = self._clock()
+        stages = [s for s in self._ladder
+                  if self._breakers.allow((matrix_id, s), t_gate)]
+        if not stages:
+            stages = [self._ladder[-1]]
+        for stage in stages:
+            key = (matrix_id, stage)
+            try:
+                fn = self._stage_solver(stage, prog, k, mat)
+            except Exception as e:  # placement infeasible, build failure
+                record(stage, "build-failed", str(e),
+                       error=type(e).__name__)
+                self._breakers.record(key, self._clock(), False)
+                continue
+            for attempt in range(1, res.retry.max_retries + 2):
+                t0 = self._clock()
+                try:
+                    x = np.asarray(fn(bmat))
+                except Exception as e:
+                    t1 = self._clock()
+                    record(stage, "exception", str(e),
+                           error=type(e).__name__, attempt=attempt,
+                           elapsed_s=t1 - t0)
+                    self._breakers.record(key, t1, False)
+                    if attempt <= res.retry.max_retries:
+                        d = res.retry.delay(attempt,
+                                            key=f"{matrix_id}:{stage}")
+                        record(stage, "backoff",
+                               f"retrying {stage} after {d:.4f}s backoff",
+                               attempt=attempt,
+                               detail={"backoff_s": d})
+                        self.stats.retries += 1
+                        if res.sleep is not None:
+                            res.sleep(d)
+                        continue
+                    break  # rung exhausted its retries: degrade
+                elapsed = self._clock() - t0
+                if res.flush_timeout_s is not None \
+                        and elapsed > res.flush_timeout_s:
+                    record(stage, "hang",
+                           f"{stage} attempt took {elapsed:.4f}s > flush "
+                           f"timeout {res.flush_timeout_s:.4f}s",
+                           attempt=attempt, elapsed_s=elapsed)
+                    self._breakers.record(key, self._clock(), False)
+                    break  # never retry a hung rung within the flush
+                if not np.isfinite(x).all():
+                    record(stage, "nonfinite-output",
+                           f"{int(np.count_nonzero(~np.isfinite(x)))} "
+                           f"non-finite solution component(s)",
+                           attempt=attempt, elapsed_s=elapsed)
+                    self._breakers.record(key, self._clock(), False)
+                    break  # deterministic health failure: degrade
+                self._breakers.record(key, self._clock(), True)
+                return x, stage
+        msg = (f"flush for {matrix_id!r} exhausted the backend ladder "
+               f"({len(trail)} incident(s); stages tried {stages})")
+        record("serve", "ladder-exhausted", msg)
+        raise BackendExecutionError(
+            msg, detail={"matrix_id": matrix_id,
+                         "incidents": [i.to_dict() for i in trail]})
+
+    # ------------------------------------------------------------------
+    def report(self):
+        """The service's health record as an `analysis.AnalysisReport`.
+
+        Every incident of the shared log (cache disk tier + resilient
+        flush path) renders as a stable SPT3xx `analysis.Diagnostic`
+        (`resilience.incident_to_diagnostic`); log saturation surfaces
+        as SPT309.  ``report().to_json()`` / ``report().render()`` are
+        the same two renderers the static-analysis CLI uses — one
+        machine-readable incident surface across the repo.
+        """
+        from .analysis.diagnostics import AnalysisReport, Diagnostic
+        from .resilience import incident_to_diagnostic
+
+        st = self.stats
+        meta = {
+            "backend": self.backend,
+            "tenants": len(self._mats),
+            "requests": st.requests,
+            "columns": st.columns,
+            "completed_columns": st.completed_columns,
+            "flushes": st.flush_count(),
+            "requests_shed": st.requests_shed,
+            "deadline_failed_columns": st.deadline_failed_columns,
+            "retries": st.retries,
+            "degraded_flushes": st.degraded_flushes,
+            "failed_flushes": st.failed_flushes,
+            "cache_hits": self.cache.hits,
+            "cache_misses": self.cache.misses,
+            "value_refreshes": self.cache.value_refreshes,
+        }
+        if self._breakers is not None:
+            meta["breakers"] = self._breakers.states()
+        rep = AnalysisReport(name=f"serve[{self.backend}]", meta=meta)
+        rep.extend(incident_to_diagnostic(i) for i in self.incidents)
+        if self.incidents.dropped:
+            rep.diagnostics.append(Diagnostic(
+                code="SPT309", severity="warn", pass_name="serve",
+                message=f"incident log saturated: {self.incidents.dropped} "
+                        f"oldest record(s) dropped (cap "
+                        f"{self.incidents.cap})",
+                detail={"dropped": self.incidents.dropped,
+                        "cap": self.incidents.cap}))
+        return rep

@@ -75,7 +75,8 @@ def pipeline():
 def test_code_registry_is_well_formed():
     for code, title in CODES.items():
         assert code.startswith("SPT") and len(code) == 6, code
-        assert code[3] in "12", f"{code}: 1xx correctness / 2xx perf only"
+        assert code[3] in "123", (
+            f"{code}: 1xx correctness / 2xx perf / 3xx serving only")
         assert title
 
 
