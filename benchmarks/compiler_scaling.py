@@ -2,6 +2,8 @@
 
 Fits compile-time against nnz across a size ladder of one archetype; the
 fitted exponent should be ~1 (linear in nnz for bounded max in-degree d).
+Also emits a per-pass timing table from ``stats.pass_stats`` so the
+pipeline stage that dominates compile time is visible at every size.
 """
 
 from __future__ import annotations
@@ -14,8 +16,9 @@ from repro.core.matrices import banded
 from .common import emit
 
 
-def run() -> list[dict]:
+def run() -> tuple[list[dict], list[dict]]:
     rows = []
+    pass_rows = []
     pts = []
     for i, n in enumerate([512, 1024, 2048, 4096, 8192, 16384]):
         mat = banded(n, 24, 0.5, 99 + i, f"scale_{n}")
@@ -29,16 +32,31 @@ def run() -> list[dict]:
             "cycles": prog.stats.cycles,
             "us_per_nnz": round(1e6 * t / mat.nnz, 3),
         })
+        pass_rows.append(pass_timing_row(prog, n))
     nnz = np.log([p[0] for p in pts])
     tt = np.log([max(p[1], 1e-9) for p in pts])
     slope = float(np.polyfit(nnz, tt, 1)[0])
     rows.append({"n": "fit", "nnz": "-", "compile_s": "-",
                  "cycles": "-", "us_per_nnz": f"exponent={slope:.2f}"})
-    return rows
+    return rows, pass_rows
+
+
+def pass_timing_row(prog, n) -> dict:
+    """One per-pass timing row: ms per pipeline stage + dominant share."""
+    seconds = {ps.name: ps.seconds for ps in prog.stats.pass_stats}
+    total = sum(seconds.values()) or 1e-9
+    row = {"n": n}
+    for name, secs in seconds.items():
+        row[f"{name}_ms"] = round(1e3 * secs, 3)
+    top = max(seconds, key=seconds.get)
+    row["dominant"] = f"{top}={100 * seconds[top] / total:.0f}%"
+    return row
 
 
 def main() -> None:
-    emit(run(), "table4_compiler_scaling")
+    rows, pass_rows = run()
+    emit(rows, "table4_compiler_scaling")
+    emit(pass_rows, "table4_pass_timing")
 
 
 if __name__ == "__main__":

@@ -25,6 +25,7 @@ from . import (
     platform_comparison,
     psum_sweep,
     robust_overhead,
+    schedule_frontier,
     serve_chaos,
     serve_load,
     sharded_batch,
@@ -48,6 +49,7 @@ MODULES = {
     "analysis": analysis_overhead,
     "serve": serve_load,
     "chaos": serve_chaos,
+    "frontier": schedule_frontier,
 }
 
 

@@ -1,15 +1,17 @@
 #!/usr/bin/env python
 """Bench-trajectory schema check: the perf history stays machine-readable.
 
-The repo keeps two perf *trajectory* files — ``BENCH_serve.json``
-(appended by ``benchmarks/serve_load.py --record``) and
+The repo keeps three perf *trajectory* files — ``BENCH_serve.json``
+(appended by ``benchmarks/serve_load.py --record``),
 ``BENCH_serve_chaos.json`` (appended by ``benchmarks/serve_chaos.py
---record``) — so re-anchors can read a curve instead of a single CSV
-snapshot.  A trajectory is only useful if every entry still parses years
-later, so this check pins both schemas: top-level envelope, per-entry
-metadata, and the per-row fields with their types.  Runs standalone
-(``python scripts/check_bench.py``) and as tier-1 tests
-(`tests/test_serve.py`, `tests/test_resilience.py`).
+--record``) and ``BENCH_schedule.json`` (appended by
+``benchmarks/schedule_frontier.py --record``) — so re-anchors can read a
+curve instead of a single CSV snapshot.  A trajectory is only useful if
+every entry still parses years later, so this check pins the schemas:
+top-level envelope, per-entry metadata, and the per-row fields with
+their types.  Runs standalone (``python scripts/check_bench.py``) and as
+tier-1 tests (`tests/test_serve.py`, `tests/test_resilience.py`,
+`tests/test_strategies.py`).
 """
 
 from __future__ import annotations
@@ -21,11 +23,14 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parent.parent
 BENCH_JSON = REPO / "BENCH_serve.json"
 CHAOS_JSON = REPO / "BENCH_serve_chaos.json"
+SCHEDULE_JSON = REPO / "BENCH_schedule.json"
 
 SCHEMA = "sptrsv-bench-serve"
 VERSION = 1
 CHAOS_SCHEMA = "sptrsv-bench-serve-chaos"
 CHAOS_VERSION = 1
+SCHEDULE_SCHEMA = "sptrsv-bench-schedule"
+SCHEDULE_VERSION = 1
 
 # required per-row fields -> accepted types
 ROW_FIELDS = {
@@ -67,6 +72,27 @@ CHAOS_ENTRY_FIELDS = {
     "host": str,
     "seed": int,
     "overhead_pct": (int, float),
+    "rows": list,
+}
+
+# scheduling-strategy frontier (benchmarks/schedule_frontier.py): one
+# cycles/stalls/spills triple per registered strategy, plus auto's pick
+_STRATEGY_NAMES = ("paper", "level", "locality", "cpath", "eager")
+SCHEDULE_ROW_FIELDS = {
+    "name": str,
+    "n": int,
+    "nnz": int,
+    "auto_pick": str,
+    "auto_cycles": int,
+    "auto_win": int,
+    **{f"{s}_{m}": int for s in _STRATEGY_NAMES
+       for m in ("cycles", "stalls", "spills")},
+}
+SCHEDULE_ENTRY_FIELDS = {
+    "recorded": str,
+    "label": str,
+    "host": str,
+    "wins": int,
     "rows": list,
 }
 
@@ -126,15 +152,39 @@ def check_chaos(path: Path = CHAOS_JSON) -> list[str]:
                        CHAOS_ROW_FIELDS, "benchmarks/serve_chaos.py")
 
 
+def check_schedule(path: Path = SCHEDULE_JSON) -> list[str]:
+    """Validate the schedule-frontier trajectory (empty == clean)."""
+    problems = _check_file(path, SCHEDULE_SCHEMA, SCHEDULE_VERSION,
+                           SCHEDULE_ENTRY_FIELDS, SCHEDULE_ROW_FIELDS,
+                           "benchmarks/schedule_frontier.py")
+    if problems:
+        return problems
+    # the frontier invariant the trajectory exists to witness: auto is
+    # never worse than the paper baseline, and each win is strict
+    doc = json.loads(path.read_text())
+    for i, entry in enumerate(doc["entries"]):
+        for j, row in enumerate(entry["rows"]):
+            where = f"{path.name}:entries[{i}].rows[{j}]"
+            if row["auto_cycles"] > row["paper_cycles"]:
+                problems.append(f"{where}: auto_cycles "
+                                f"{row['auto_cycles']} worse than paper "
+                                f"{row['paper_cycles']}")
+            if row["auto_win"] != int(row["auto_cycles"]
+                                      < row["paper_cycles"]):
+                problems.append(f"{where}: auto_win flag inconsistent "
+                                f"with the cycle counts")
+    return problems
+
+
 def main() -> int:
-    problems = check() + check_chaos()
+    problems = check() + check_chaos() + check_schedule()
     for p in problems:
         print(f"check_bench: {p}", file=sys.stderr)
     if problems:
         print(f"check_bench: {len(problems)} schema problem(s)",
               file=sys.stderr)
         return 1
-    for path in (BENCH_JSON, CHAOS_JSON):
+    for path in (BENCH_JSON, CHAOS_JSON, SCHEDULE_JSON):
         doc = json.loads(path.read_text())
         n_rows = sum(len(e["rows"]) for e in doc["entries"])
         print(f"check_bench: {path.name} OK ({len(doc['entries'])} "

@@ -28,10 +28,11 @@ DOC_FILES = {
     "README.md": REPO / "README.md",
     "benchmarks.md": REPO / "docs" / "benchmarks.md",
     # perf-trajectory files sources/docs point at (benchmarks/serve_load.py
-    # / serve_chaos.py --record append entries; schemas pinned by
-    # scripts/check_bench.py)
+    # / serve_chaos.py / schedule_frontier.py --record append entries;
+    # schemas pinned by scripts/check_bench.py)
     "BENCH_serve.json": REPO / "BENCH_serve.json",
     "BENCH_serve_chaos.json": REPO / "BENCH_serve_chaos.json",
+    "BENCH_schedule.json": REPO / "BENCH_schedule.json",
 }
 
 # "DESIGN.md §1", "DESIGN.md §1/§3", "DESIGN.md §Perf head-folding"
@@ -39,7 +40,7 @@ _REF_RE = re.compile(r"DESIGN\.md\s+((?:§[A-Za-z0-9]+)(?:/§[A-Za-z0-9]+)*)")
 _HEAD_RE = re.compile(r"^#{1,6}\s+§([A-Za-z0-9]+)\b", re.MULTILINE)
 _FILE_RE = re.compile(
     r"\b(DESIGN\.md|README\.md|benchmarks\.md|BENCH_serve_chaos\.json"
-    r"|BENCH_serve\.json)\b")
+    r"|BENCH_serve\.json|BENCH_schedule\.json)\b")
 
 
 def design_headings() -> set[str]:

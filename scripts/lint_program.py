@@ -10,6 +10,14 @@ the full hazard detector plus performance linter and renders the
     python scripts/lint_program.py --matrix ckt_rajat04 --matrix band_cz
     python scripts/lint_program.py --suite --max-n 3000 --json
     python scripts/lint_program.py --matrix hub_mid --verify-ir
+    python scripts/lint_program.py --matrix ckt_add20 --schedule paper \
+        --frontier   # SPT208 when a better strategy exists
+
+``--schedule`` compiles ``--matrix``/``--suite`` entries with a specific
+scheduler strategy (or ``auto``); ``--frontier`` additionally computes
+every strategy's predicted cost for the matrix and attaches it to the
+program's stats, arming the SPT208 "cycles left on the table" lint for
+non-auto compiles (DESIGN.md §11).
 
 Exit status is 1 when any report carries an error-severity diagnostic
 (warn/info lints alone exit 0), so the CLI slots into CI gates.
@@ -37,7 +45,15 @@ def _reports(args):
         prog = api.load_program(path, verify=False)
         yield analyze_program(prog, lint=not args.no_lint, lint_cfg=lc)
     for name in names:
-        prog = api.compile(matrices.generate(name), verify_ir=args.verify_ir)
+        mat = matrices.generate(name)
+        prog = api.compile(mat, schedule=args.schedule,
+                           verify_ir=args.verify_ir)
+        if args.frontier and prog.stats.schedule_costs is None:
+            from repro.core.compiler import strategies
+            from repro.core.frontends.sptrsv import lower_tri
+
+            prog.stats.schedule_costs = strategies.frontier_costs(
+                lower_tri(mat), prog.config)
         yield analyze_program(prog, lint=not args.no_lint, lint_cfg=lc)
 
 
@@ -55,6 +71,14 @@ def main(argv=None) -> int:
     ap.add_argument("--verify-ir", action="store_true",
                     help="also run the per-pass IR contract verifiers "
                          "while compiling --matrix/--suite entries")
+    ap.add_argument("--schedule", default="paper",
+                    help="scheduler strategy for --matrix/--suite "
+                         "compiles: a strategies.STRATEGIES name or "
+                         "'auto' (default paper)")
+    ap.add_argument("--frontier", action="store_true",
+                    help="compute every strategy's predicted cost and "
+                         "attach it to stats.schedule_costs, arming the "
+                         "SPT208 frontier lint for non-auto compiles")
     ap.add_argument("--no-lint", action="store_true",
                     help="hazard/contract diagnostics only, skip the "
                          "SPT2xx performance lints")

@@ -67,6 +67,7 @@ CODES: dict[str, str] = {
     "SPT205": "row envelope admits no blocked placement window",
     "SPT206": "PE utilization below threshold",
     "SPT207": "bank-conflict replay density above threshold",
+    "SPT208": "scheduler strategy leaves cycles on the table vs the frontier",
     # -- serving / resilience incidents (DESIGN.md §10) ---------------------
     # `serve.SolveService.report()` renders every `robust.Incident` of the
     # serving layer through these codes, so breaker transitions, shed

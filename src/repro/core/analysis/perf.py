@@ -12,7 +12,11 @@ footprint observation with a suggested knob:
   * SPT205 — the row envelope admits no blocked placement window, so the
     HBM-resident large-n path is unavailable;
   * SPT206 — PE utilization below threshold;
-  * SPT207 — bank-conflict replay density (bnop share of all lanes).
+  * SPT207 — bank-conflict replay density (bnop share of all lanes);
+  * SPT208 — the compiled scheduler strategy's predicted cycles exceed
+    the best strategy on the frontier by more than ``frontier_warn``
+    (requires ``stats.schedule_costs`` — recorded by ``schedule="auto"``
+    compiles, or attached by `scripts/lint_program.py --frontier`).
 
 Thresholds live in `LintConfig`; defaults are calibrated so the bundled
 suite at the default `AccelConfig` stays warning-meaningful (hub-pattern
@@ -38,6 +42,8 @@ class LintConfig:
     util_warn: float = 0.10        # SPT206: exec lanes / total lanes
     conflict_warn: float = 0.05    # SPT207: bnop lanes / total lanes
     cycles_per_block: int = 128    # SPT205: blocked-placement granularity
+    frontier_warn: float = 0.10    # SPT208: predicted cycles over the best
+                                   # frontier strategy, as a fraction
 
 
 def _diag(code, severity, message, *, hint="", **detail):
@@ -154,4 +160,23 @@ def lint_program(prog, lint_cfg: LintConfig | None = None):
                  "(cfg.icr) to color conflicting reads apart",
             bnop=int(st.bnop),
             density=round(st.bnop / total_lanes, 4)))
+
+    # SPT208 — cycles left on the scheduling-strategy frontier
+    costs = getattr(st, "schedule_costs", None)
+    chosen = getattr(st, "schedule", "paper")
+    if costs and chosen in costs:
+        mine = costs[chosen]["cycles"]
+        best = min(costs, key=lambda k: costs[k]["cycles"])
+        best_cycles = costs[best]["cycles"]
+        if best_cycles and mine > best_cycles * (1.0 + lc.frontier_warn):
+            diags.append(_diag(
+                "SPT208", SEV_WARN,
+                f"strategy {chosen!r} predicts {mine} cycles but "
+                f"{best!r} predicts {best_cycles} "
+                f"({100 * (mine / best_cycles - 1):.1f}% over, "
+                f"> {100 * lc.frontier_warn:.0f}%)",
+                hint=f'recompile with schedule="{best}" (or '
+                     f'schedule="auto" to pick per matrix)',
+                schedule=chosen, best=best,
+                predicted={k: int(v["cycles"]) for k, v in costs.items()}))
     return diags

@@ -132,8 +132,11 @@ def matrix(name: str) -> TriCSR:
 
 
 def compile(mat: TriCSR, cfg: AccelConfig | None = None, *,  # noqa: A001
+            schedule: str = "paper",
             verify_ir: bool = False) -> Program:
-    return compile_program(mat, cfg, verify_ir=verify_ir)
+    """Compile ``mat``; ``schedule="auto"`` picks the predicted-cheapest
+    scheduler strategy per matrix (`compiler.strategies`, DESIGN.md §11)."""
+    return compile_program(mat, cfg, schedule=schedule, verify_ir=verify_ir)
 
 
 def recompile_values(prog: Program, mat: TriCSR) -> Program:
@@ -291,44 +294,55 @@ class SolvePair:
 
 def compile_dag(dag: ComputeDag, cfg: AccelConfig | None = None, *,
                 planes: int | None = None,
+                schedule: str = "paper",
                 verify_ir: bool = False) -> Program:
     """Compile a generic `compiler.ComputeDag` through the staged pipeline.
 
-    ``verify_ir=True`` runs the per-pass contract verifiers between
-    stages (`core/analysis/`) and raises `errors.IRValidationError`
-    naming the guilty pass on the first broken invariant.
+    ``schedule`` picks the schedule pass — ``"paper"``, an alternative
+    strategy name, or ``"auto"`` for per-matrix cost-model selection
+    (DESIGN.md §11).  ``verify_ir=True`` runs the per-pass contract
+    verifiers between stages (`core/analysis/`) and raises
+    `errors.IRValidationError` naming the guilty pass on the first broken
+    invariant.
     """
-    return _compile_dag(dag, cfg, planes=planes, verify_ir=verify_ir)
+    return _compile_dag(dag, cfg, planes=planes, schedule=schedule,
+                        verify_ir=verify_ir)
 
 
 def compile_upper(mat: UpperCSR, cfg: AccelConfig | None = None, *,
                   planes: int | None = None,
+                  schedule: str = "paper",
                   verify_ir: bool = False) -> CompiledWorkload:
     """Compile the upper-triangular solve Ux=b (CSC-row reversal frontend)."""
     dag, perm = lower_upper(mat)
     return CompiledWorkload(_compile_dag(dag, cfg, planes=planes,
+                                         schedule=schedule,
                                          verify_ir=verify_ir),
                             perm=perm, name=mat.name)
 
 
 def compile_pair(mat: TriCSR, cfg: AccelConfig | None = None, *,
                  planes: int | None = None,
+                 schedule: str = "paper",
                  verify_ir: bool = False) -> SolvePair:
     """Compile the forward (Ly=b) + backward (Lᵀx=y) sweep pair of ``mat``."""
     fwd = CompiledWorkload(compile_program(mat, cfg, planes=planes,
+                                           schedule=schedule,
                                            verify_ir=verify_ir),
                            name=mat.name)
     bwd = compile_upper(transpose_upper(mat), cfg, planes=planes,
-                        verify_ir=verify_ir)
+                        schedule=schedule, verify_ir=verify_ir)
     return SolvePair(forward=fwd, backward=bwd)
 
 
 def compile_circuit(circ: DagCircuit, cfg: AccelConfig | None = None, *,
                     planes: int | None = None,
+                    schedule: str = "paper",
                     verify_ir: bool = False) -> CompiledWorkload:
     """Compile a general DAG circuit (`frontends.dagcirc`) workload."""
     return CompiledWorkload(_compile_dag(lower_circuit(circ), cfg,
-                                         planes=planes, verify_ir=verify_ir),
+                                         planes=planes, schedule=schedule,
+                                         verify_ir=verify_ir),
                             name=circ.name)
 
 
@@ -403,8 +417,8 @@ def robust_solver(prog: Program, mat: TriCSR | None = None, **opts):
 def make_service(matrices=None, *, capacity: int = 32, disk_dir=None,
                  max_batch: int = 16, max_delay: float = 1e-3,
                  clock=None, timer=None, cfg: AccelConfig | None = None,
-                 backend: str = "jax", mesh=None, resilience=None,
-                 **backend_opts):
+                 schedule: str = "paper", backend: str = "jax", mesh=None,
+                 resilience=None, **backend_opts):
     """Build a production solve service (`core.serve`, DESIGN.md §9).
 
     Returns a `serve.SolveService` over a fresh `serve.ProgramCache`
@@ -445,7 +459,8 @@ def make_service(matrices=None, *, capacity: int = 32, disk_dir=None,
         import time
 
         clock = time.monotonic
-    cache = serve.ProgramCache(capacity=capacity, disk_dir=disk_dir, cfg=cfg)
+    cache = serve.ProgramCache(capacity=capacity, disk_dir=disk_dir, cfg=cfg,
+                               schedule=schedule)
     svc = serve.SolveService(cache, max_batch=max_batch,
                              max_delay=max_delay, clock=clock, timer=timer,
                              backend=backend, mesh=mesh,
@@ -470,6 +485,9 @@ def report(prog: Program) -> dict:
         "name": st.name,
         "n": st.n,
         "nnz": st.nnz,
+        # which scheduler strategy produced this program (DESIGN.md §11);
+        # auto compiles also expose the per-candidate predictions
+        "schedule": getattr(st, "schedule", "paper"),
         "cycles": st.cycles,
         # packed-encoding accounting (PR 4) — benchmark CSVs and docs read
         # these here instead of recomputing them from the Program by hand
@@ -487,6 +505,8 @@ def report(prog: Program) -> dict:
         "conflicts": st.conflicts,
         "reuse_events": st.reuse_events,
     }
+    if getattr(st, "schedule_costs", None):
+        out["schedule_costs"] = st.schedule_costs
     return out
 
 

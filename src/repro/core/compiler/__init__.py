@@ -53,6 +53,7 @@ PASS_NAMES = ("partition", "cu_assign", "psum_schedule", "icr_reorder",
 
 def compile_dag(dag: ComputeDag, cfg: AccelConfig | None = None, *,
                 planes: int | None = None,
+                schedule: str = "paper",
                 verify_ir: bool = False) -> Program:
     """Compile a `ComputeDag` workload into a packed VLIW `Program`.
 
@@ -60,6 +61,14 @@ def compile_dag(dag: ComputeDag, cfg: AccelConfig | None = None, *,
     large-n fallback); ``None`` auto-selects via `program.packed_planes`.
     The pipeline stages run in order; each records a `PassStats` entry on
     ``program.stats.pass_stats``.
+
+    ``schedule`` picks the schedule pass (DESIGN.md §11): ``"paper"`` (the
+    default psum-cache scheduler), an alternative strategy by name
+    (``"level"``, ``"locality"``), or ``"auto"`` — compile every candidate
+    and keep the one the analytic cost model predicts cheapest.  The
+    decision lands in ``stats.schedule`` (and, for auto, the per-candidate
+    predictions in ``stats.schedule_costs``); auto's selection overhead is
+    a synthetic ``"strategy_select"`` entry on ``pass_stats``.
 
     ``verify_ir=True`` runs the per-pass contract verifiers
     (`core/analysis/contracts.py`) on every intermediate IR and raises
@@ -97,7 +106,26 @@ def compile_dag(dag: ComputeDag, cfg: AccelConfig | None = None, *,
     _check(lambda: contracts.verify_partition(pir), "partition")
     air, t_assign = _timed(assign.run, pir, cfg)
     _check(lambda: contracts.verify_assign(air, cfg), "cu_assign")
-    sir, t_sched = _timed(sched.run, air, cfg)
+    select_stats = None
+    if schedule == "auto":
+        from . import strategies
+
+        t = time.perf_counter()
+        sir, chosen, costs, run_seconds = strategies.select(air, cfg)
+        t_select = time.perf_counter() - t
+        t_sched = run_seconds[chosen]
+        sir.stats.schedule_costs = costs
+        select_stats = PassStats("strategy_select", t_select - t_sched, {
+            "chosen": chosen,
+            "candidates": list(costs),
+            "predicted_cycles": {k: v["cycles"] for k, v in costs.items()},
+        })
+    elif schedule == "paper":
+        sir, t_sched = _timed(sched.run, air, cfg)
+    else:
+        from . import strategies
+
+        sir, t_sched = _timed(strategies.get(schedule), air, cfg)
     _check(lambda: contracts.verify_schedule(sir, air, cfg), "psum_schedule")
     eir, t_elide = _timed(elide.run, sir)
     _check(lambda: contracts.verify_emit(eir, sir), "stall_elide")
@@ -122,6 +150,8 @@ def compile_dag(dag: ComputeDag, cfg: AccelConfig | None = None, *,
             "instr_bytes": prog.instr_bytes(),
         }),
     ]
+    if select_stats is not None:
+        prog.stats.pass_stats.append(select_stats)
     if verify_ir:
         prog.stats.pass_stats.append(
             PassStats("verify_ir", t_verify, {"stages_verified": verified}))

@@ -230,6 +230,13 @@ class ScheduleStats:
     # per-pass observability of the staged pipeline (DESIGN.md §6): a list
     # of `compiler.PassStats` (name, seconds, metrics) in pass order
     pass_stats: list | None = None
+    # scheduling-strategy frontier (DESIGN.md §11): which schedule pass
+    # produced this program, and — on schedule="auto" compiles — the
+    # predicted cost of every candidate ({name: {cycles, stall_rows,
+    # psum_spills, planes}}), the evidence behind the pick (and behind the
+    # SPT208 "cycles left on the table" perf lint)
+    schedule: str = "paper"
+    schedule_costs: dict | None = None
 
     # -- paper metrics ---------------------------------------------------
     def flops(self) -> int:

@@ -39,15 +39,18 @@ def allocate_nodes(mat: TriCSR, cfg: AccelConfig) -> list[list[int]]:
 
 def compile_program(mat: TriCSR, cfg: AccelConfig | None = None, *,
                     planes: int | None = None,
+                    schedule: str = "paper",
                     verify_ir: bool = False) -> Program:
     """Compile ``mat`` into a packed VLIW `Program`.
 
     ``planes`` forces the packed-word layout (1 = single-word, 2 = the
     large-n fallback); ``None`` auto-selects via `program.packed_planes`.
-    ``verify_ir=True`` runs the per-pass contract verifiers between
-    pipeline stages (`core/analysis/`, raises `errors.IRValidationError`
-    naming the guilty pass).  Equivalent to
+    ``schedule`` picks the schedule pass — a strategy name from
+    `compiler.strategies` or ``"auto"`` for per-matrix cost-model
+    selection (DESIGN.md §11).  ``verify_ir=True`` runs the per-pass
+    contract verifiers between pipeline stages (`core/analysis/`, raises
+    `errors.IRValidationError` naming the guilty pass).  Equivalent to
     ``compiler.compile_dag(frontends.sptrsv.lower_tri(mat))``.
     """
     return compile_dag(lower_tri(mat), cfg, planes=planes,
-                       verify_ir=verify_ir)
+                       schedule=schedule, verify_ir=verify_ir)

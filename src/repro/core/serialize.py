@@ -63,7 +63,9 @@ _ARRAYS = (
 )
 _STATS_ARRAYS = (("per_cu_edges", False),)
 # ScheduleStats fields that do NOT round-trip as JSON scalars
-_STATS_SKIP = {"per_cu_edges", "pass_stats"}
+# (schedule_costs is a nested dict — auto-select evidence, not a scalar;
+# the chosen strategy name itself round-trips via the "schedule" field)
+_STATS_SKIP = {"per_cu_edges", "pass_stats", "schedule_costs"}
 
 
 def _corrupt(msg: str, **detail) -> ProgramCorruptionError:

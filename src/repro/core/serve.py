@@ -118,7 +118,7 @@ FLUSH_SHED = "shed"          # admission control rejected a submit (the
 _FP_TAG = b"sptrsv-pattern-v1"
 
 
-def pattern_fingerprint(mat: TriCSR) -> str:
+def pattern_fingerprint(mat: TriCSR, schedule: str = "paper") -> str:
     """Structure-only fingerprint of a CSR sparsity pattern (hex, 16 chars).
 
     Hashes ``(n, rowptr, colidx)`` and nothing else — numeric values do
@@ -126,11 +126,19 @@ def pattern_fingerprint(mat: TriCSR) -> str:
     fresh values maps to one fingerprint (the cache guards value changes
     separately with a values CRC).  Two same-shape matrices with
     different patterns fingerprint differently.
+
+    ``schedule`` is the scheduler-strategy the program is compiled with
+    (DESIGN.md §11): a non-default strategy participates in the hash, so
+    one pattern compiled under two strategies occupies two cache entries
+    — no silent reuse of the wrong schedule.  The default ``"paper"``
+    hashes exactly as before, keeping pre-frontier disk tiers valid.
     """
     h = hashlib.sha256(_FP_TAG)
     h.update(int(mat.n).to_bytes(8, "little"))
     h.update(np.ascontiguousarray(mat.rowptr, dtype=np.int64).tobytes())
     h.update(np.ascontiguousarray(mat.colidx, dtype=np.int64).tobytes())
+    if schedule != "paper":
+        h.update(b"|schedule=" + schedule.encode())
     return h.hexdigest()[:16]
 
 
@@ -175,13 +183,17 @@ class ProgramCache:
 
     def __init__(self, capacity: int = 32, disk_dir=None,
                  cfg: AccelConfig | None = None, compile_fn=None,
-                 incident_cap: int = 1024):
+                 schedule: str = "paper", incident_cap: int = 1024):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = int(capacity)
         self.disk_dir = os.fspath(disk_dir) if disk_dir is not None else None
         self._cfg = cfg
-        self._compile = compile_fn or (lambda m: compile_program(m, cfg))
+        # the strategy keys the fingerprint (same pattern under two
+        # strategies -> two entries) and parameterizes the default compile
+        self.schedule = schedule
+        self._compile = compile_fn or (
+            lambda m: compile_program(m, cfg, schedule=schedule))
         self._mem: "OrderedDict[str, tuple[Program, int]]" = OrderedDict()
         self.entries: dict[str, CacheEntryStats] = {}
         # ONE bounded incident log for the whole serving layer: the
@@ -218,7 +230,7 @@ class ProgramCache:
     def get(self, mat: TriCSR) -> Program:
         """The compiled program for ``mat``'s pattern+values, through the
         tiers: memory LRU -> disk rehydrate -> compile (write-through)."""
-        fp = pattern_fingerprint(mat)
+        fp = pattern_fingerprint(mat, self.schedule)
         vcrc = _values_crc(mat)
         ent = self._entry(fp, mat.name)
         cached = self._mem.get(fp)
@@ -543,7 +555,8 @@ class SolveService:
         if matrix_id in self._mats:
             raise ValueError(f"matrix_id {matrix_id!r} already registered")
         self._mats[matrix_id] = mat
-        return pattern_fingerprint(mat)
+        return pattern_fingerprint(mat, getattr(self.cache, "schedule",
+                                                "paper"))
 
     def matrix_ids(self) -> list[str]:
         return list(self._mats)
